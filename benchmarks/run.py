@@ -1,0 +1,28 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-rows", type=int, default=30000,
+                    help="database rows (paper: 1M in C++; see scale note)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller rows for a fast smoke pass")
+    args = ap.parse_args()
+    n = 8000 if args.quick else args.n_rows
+
+    from benchmarks import paper_tables as T
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    T.bench_kernels()
+    T.bench_endtoend(n_rows=n, kinds=("hnsw", "diskann"))
+    T.bench_storage_sweep(n_rows=n)
+    T.bench_scalability(n_rows=n)
+    T.bench_case_study(n_rows=n)
+    print(f"# total benchmark wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

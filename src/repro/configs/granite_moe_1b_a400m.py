@@ -1,0 +1,4 @@
+"""Config for --arch granite-moe-1b-a400m (see all_archs.py for the full spec)."""
+from repro.configs.base import get_arch
+
+CONFIG = get_arch("granite-moe-1b-a400m")

@@ -1,0 +1,4 @@
+"""Config for --arch zamba2-1.2b (see all_archs.py for the full spec)."""
+from repro.configs.base import get_arch
+
+CONFIG = get_arch("zamba2-1.2b")

@@ -1,0 +1,189 @@
+"""MINT facade (paper Fig. 1) + baselines (PerColumn / PerQuery) + the
+real-execution evaluation harness used by the benchmarks.
+
+The tuner works entirely on *hypothetical* indexes (estimator sample); the
+``execute_*`` functions below materialize real indexes and measure actual
+cost (numDist × dim, the paper's latency proxy), wall time, and true recall
+against full-database ground truth.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.estimators import (EstimatorBundle, StorageEstimator,
+                                   train_estimators)
+from repro.core.planner import QueryPlanner, WhatIfContext
+from repro.core.searcher import BeamSearchParams, ConfigurationSearcher
+from repro.core.types import (Constraints, IndexSpec, Query, QueryPlan,
+                              TuningResult, Workload)
+from repro.data.vectors import MultiVectorDatabase
+from repro.index.base import exact_topk
+from repro.index.registry import IndexStore
+
+
+@dataclass
+class Mint:
+    """Index tuner: train estimators once per database, then tune workloads."""
+
+    db: MultiVectorDatabase
+    index_kind: str = "hnsw"
+    seed: int = 0
+    sample_rate: float = 0.01
+    min_sample_rows: int = 2000
+    estimators: EstimatorBundle | None = None
+    _sample: MultiVectorDatabase | None = None
+
+    def train(self) -> EstimatorBundle:
+        if self.estimators is None:
+            self.estimators = train_estimators(
+                self.db, kinds=(self.index_kind,),
+                sample_rate=self.sample_rate,
+                min_sample_rows=self.min_sample_rows, seed=self.seed)
+            self._sample, _ = self.db.sample(self.estimators.sample_rate,
+                                             seed=self.seed)
+        return self.estimators
+
+    def planner(self, constraints: Constraints) -> QueryPlanner:
+        self.train()
+        return QueryPlanner(estimators=self.estimators, database=self.db,
+                            theta_recall=constraints.theta_recall, seed=self.seed)
+
+    def tune(self, workload: Workload, constraints: Constraints,
+             params: BeamSearchParams | None = None) -> TuningResult:
+        params = params or BeamSearchParams(index_kind=self.index_kind)
+        params.index_kind = self.index_kind
+        planner = self.planner(constraints)
+        searcher = ConfigurationSearcher(planner, workload, constraints, params)
+        result = searcher.search()
+        result.trace.append({"what_if_calls": searcher.what_if_calls,
+                             "cache_hits": searcher.cache_hits,
+                             "train_seconds": self.estimators.train_seconds})
+        return result
+
+    # ---- baselines (paper Section 5.1 'Approaches') ----
+    def per_column(self, workload: Workload, constraints: Constraints) -> TuningResult:
+        """One index per column; each query planned over its columns' indexes."""
+        cols = sorted({c for q in workload.queries for c in q.vid})
+        config = frozenset(IndexSpec(vid=(c,), kind=self.index_kind) for c in cols)
+        return self._fixed_config_result(config, workload, constraints)
+
+    def per_query(self, workload: Workload, constraints: Constraints) -> TuningResult:
+        """One exact-vid index per distinct query column set (latency lower
+        bound; violates storage in the paper's workloads)."""
+        config = frozenset(IndexSpec(vid=q.vid, kind=self.index_kind)
+                           for q in workload.queries)
+        return self._fixed_config_result(config, workload, constraints)
+
+    def _fixed_config_result(self, config: frozenset, workload: Workload,
+                             constraints: Constraints) -> TuningResult:
+        planner = self.planner(constraints)
+        cost = 0.0
+        plans = {}
+        for q, p in workload:
+            plan = planner.plan(q, config)
+            plans[q.qid] = plan
+            cost += p * plan.est_cost
+        storage = StorageEstimator(self.db.n_rows, constraints.storage_mode).storage(config)
+        return TuningResult(configuration=config, plans=plans,
+                            est_workload_cost=cost, storage=storage)
+
+
+# --------------------------------------------------------------------------
+# Real execution (materialized indexes) — measurement harness
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ExecutionMetrics:
+    qid: int
+    cost: float          # dim-weighted distance computations (paper proxy)
+    wall_ms: float
+    recall: float        # vs full-DB exact ground truth
+    num_dist: int
+    eks: dict[str, int] = field(default_factory=dict)
+
+
+def execute_plan(db: MultiVectorDatabase, store: IndexStore, query: Query,
+                 plan: QueryPlan, gt_ids: np.ndarray | None = None) -> ExecutionMetrics:
+    """Run a plan on real indexes: per-index scans, then full-score rerank
+    (Eq. 4-6 accounting), and measure true recall@k."""
+    t0 = time.time()
+    k = query.k
+    if gt_ids is None:
+        gt_ids, _ = exact_topk(db.concat(query.vid), query.concat(), k)
+    gt = set(int(i) for i in gt_ids)
+
+    if not plan.indexes:  # flat scan fallback
+        ids, _ = exact_topk(db.concat(query.vid), query.concat(), k)
+        wall = (time.time() - t0) * 1e3
+        cost = query.dim() * db.n_rows
+        rec = len(gt & set(int(i) for i in ids)) / max(len(gt), 1)
+        return ExecutionMetrics(query.qid, cost, wall, rec, db.n_rows, {})
+
+    cand: list[np.ndarray] = []
+    cost = 0.0
+    num_dist = 0
+    eks = {}
+    for spec, ek in zip(plan.indexes, plan.eks):
+        idx = store.get(spec)
+        res = idx.search(query.concat(spec.vid), ek)
+        cand.append(res.ids)
+        cost += idx.dim * res.num_dist
+        num_dist += res.num_dist
+        eks[spec.name] = ek
+
+    single_exact = len(plan.indexes) == 1 and plan.indexes[0].vid == query.vid
+    if single_exact:
+        ids = cand[0][:k]
+    else:
+        # rerank: full score over union (cost counts duplicates — Eq. 6)
+        total_ek = int(sum(plan.eks))
+        cost += query.dim() * total_ek
+        num_dist += total_ek
+        union = np.unique(np.concatenate(cand))
+        scores = db.concat(query.vid)[union] @ query.concat()
+        top = np.argsort(-scores, kind="stable")[:k]
+        ids = union[top]
+    wall = (time.time() - t0) * 1e3
+    rec = len(gt & set(int(i) for i in ids)) / max(len(gt), 1)
+    return ExecutionMetrics(query.qid, cost, wall, rec, num_dist, eks)
+
+
+@dataclass
+class WorkloadMetrics:
+    per_query: list[ExecutionMetrics]
+    weighted_cost: float
+    weighted_wall_ms: float
+    min_recall: float
+    mean_recall: float
+    storage: float
+
+
+def execute_workload(db: MultiVectorDatabase, store: IndexStore,
+                     workload: Workload, result: TuningResult,
+                     gt_cache: dict[int, np.ndarray] | None = None) -> WorkloadMetrics:
+    per_query = []
+    wc = 0.0
+    ww = 0.0
+    for q, p in workload:
+        gt = None if gt_cache is None else gt_cache.get(q.qid)
+        m = execute_plan(db, store, q, result.plans[q.qid], gt_ids=gt)
+        per_query.append(m)
+        wc += p * m.cost
+        ww += p * m.wall_ms
+    recalls = [m.recall for m in per_query]
+    return WorkloadMetrics(
+        per_query=per_query, weighted_cost=wc, weighted_wall_ms=ww,
+        min_recall=min(recalls), mean_recall=float(np.mean(recalls)),
+        storage=result.storage)
+
+
+def ground_truth_cache(db: MultiVectorDatabase, workload: Workload) -> dict[int, np.ndarray]:
+    out = {}
+    for q, _ in workload:
+        ids, _ = exact_topk(db.concat(q.vid), q.concat(), q.k)
+        out[q.qid] = ids
+    return out

@@ -1,0 +1,48 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Checkpoints store full (unsharded) arrays, so resharding is a placement
+problem, not a data problem: ``reshard_tree`` re-lays the same global arrays
+out with the shardings of the NEW mesh. Batch-dependent state (none in
+params/optimizer) never blocks a topology change; training resumes on any
+mesh whose axes divide the tensor dims — verified by ``check_mesh_fits``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import param_shardings, param_spec
+
+
+def check_mesh_fits(params_abs, mesh: Mesh) -> list[str]:
+    """Return a list of (path, problem) strings; empty == mesh is usable."""
+    problems = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params_abs):
+        spec = param_spec(path, leaf)
+        for ax, name in enumerate(spec):
+            if name is None:
+                continue
+            size = mesh.shape[name] if isinstance(name, str) else \
+                int(np.prod([mesh.shape[n] for n in name]))
+            if leaf.shape[ax] % size != 0:
+                problems.append(f"{path}: dim {ax} ({leaf.shape[ax]}) "
+                                f"% {name}({size}) != 0")
+    return problems
+
+
+def reshard_tree(tree, mesh: Mesh):
+    """Place a host-resident pytree onto ``mesh`` with the standard rules."""
+    sh = param_shardings(tree, mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh)
+
+
+def resize_data_parallel(batch_arrays: dict, old_dp: int, new_dp: int) -> dict:
+    """Deterministic re-bucketing of per-host data-loader state when the
+    data-parallel world changes (elastic scale up/down): shard i of old_dp
+    maps to shards [i*new/old, ...) of new_dp."""
+    assert old_dp > 0 and new_dp > 0
+    mapping = {}
+    for i in range(new_dp):
+        mapping[i] = int(i * old_dp / new_dp)
+    return mapping

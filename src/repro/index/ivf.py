@@ -1,0 +1,83 @@
+"""IVF-Flat — the TPU-native index kind (see DESIGN.md §3).
+
+k-means partitions (Lloyd in JAX); a search probes the nprobe nearest
+partitions and scores every row in them: a dense gather + matmul, which on
+TPU maps onto the Pallas fused distance kernel (MXU) + blockwise top-k.
+numDist = n_partitions (centroid pass) + rows scanned, exactly MINT's proxy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.base import SearchResult, VectorIndex
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _lloyd(data: jnp.ndarray, init: jnp.ndarray, n_iters: int = 8):
+    def step(centroids, _):
+        # cosine k-means: assign to most-similar centroid, re-normalize means
+        sims = data @ centroids.T
+        assign = jnp.argmax(sims, axis=1)
+        onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=data.dtype)
+        sums = onehot.T @ data
+        counts = onehot.sum(axis=0)[:, None]
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), centroids)
+        norm = jnp.linalg.norm(new, axis=1, keepdims=True)
+        return new / jnp.maximum(norm, 1e-12), None
+
+    centroids, _ = jax.lax.scan(step, init, None, length=n_iters)
+    sims = data @ centroids.T
+    return centroids, jnp.argmax(sims, axis=1)
+
+
+class IVFFlatIndex(VectorIndex):
+    kind = "ivf"
+    max_degree = 0
+
+    def __init__(self, data: np.ndarray, n_lists: int | None = None,
+                 n_iters: int = 8, seed: int = 0):
+        super().__init__(data)
+        if n_lists is None:
+            n_lists = max(4, int(np.sqrt(self.n)))
+        n_lists = min(n_lists, self.n)
+        rng = np.random.default_rng(seed)
+        init = self.data[rng.choice(self.n, size=n_lists, replace=False)]
+        centroids, assign = _lloyd(jnp.asarray(self.data), jnp.asarray(init), n_iters)
+        self.centroids = np.asarray(centroids)
+        assign = np.asarray(assign)
+        order = np.argsort(assign, kind="stable")
+        self.row_ids = order.astype(np.int64)
+        sorted_assign = assign[order]
+        self.offsets = np.searchsorted(sorted_assign, np.arange(n_lists + 1))
+        self.n_lists = n_lists
+
+    def _nprobe_for(self, ek: int, overscan: float = 4.0) -> int:
+        avg = max(self.n / self.n_lists, 1.0)
+        return int(np.clip(np.ceil(overscan * ek / avg), 1, self.n_lists))
+
+    def search(self, qvec: np.ndarray, ek: int, nprobe: int | None = None) -> SearchResult:
+        qvec = np.asarray(qvec, dtype=np.float32)
+        csims = self.centroids @ qvec
+        num_dist = self.n_lists
+        nprobe = nprobe if nprobe is not None else self._nprobe_for(ek)
+        probe = np.argsort(-csims, kind="stable")[:nprobe]
+        rows = np.concatenate([
+            self.row_ids[self.offsets[p]:self.offsets[p + 1]] for p in probe
+        ]) if nprobe else np.empty(0, dtype=np.int64)
+        if rows.shape[0] == 0:
+            return SearchResult(np.empty(0, np.int64), np.empty(0, np.float32), num_dist)
+        scores = self.data[rows] @ qvec
+        num_dist += int(rows.shape[0])
+        ek = min(ek, rows.shape[0])
+        part = np.argpartition(-scores, ek - 1)[:ek]
+        order = np.argsort(-scores[part], kind="stable")
+        sel = part[order]
+        return SearchResult(ids=rows[sel], scores=scores[sel], num_dist=num_dist)
+
+    def storage_bytes(self, edge_bytes: int = 4) -> int:
+        # centroid table + inverted-list row ids
+        return int(self.centroids.size * 4 + self.row_ids.size * edge_bytes)

@@ -1,0 +1,50 @@
+"""Index builders keyed by IndexSpec, with a build cache.
+
+``IndexStore`` materializes real indexes over a MultiVectorDatabase —
+multi-column specs index the column concatenation (valid because all columns
+are L2-normalized, so concat-dot == sum of per-column cosine scores).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.types import IndexSpec
+from repro.data.vectors import MultiVectorDatabase
+from repro.index.base import VectorIndex
+from repro.index.bruteforce import FlatIndex
+from repro.index.graph import HNSWIndex, VamanaIndex
+from repro.index.ivf import IVFFlatIndex
+
+BUILDERS: dict[str, Callable[..., VectorIndex]] = {
+    "hnsw": lambda data, seed=0, **kw: HNSWIndex(data, seed=seed, **kw),
+    "diskann": lambda data, seed=0, **kw: VamanaIndex(data, seed=seed, **kw),
+    "ivf": lambda data, seed=0, **kw: IVFFlatIndex(
+        data, seed=seed, **{k: v for k, v in kw.items() if k != "col_dims"}),
+    "flat": lambda data, seed=0, **kw: FlatIndex(data),
+}
+
+
+class IndexStore:
+    def __init__(self, db: MultiVectorDatabase, seed: int = 0, **builder_kwargs):
+        self.db = db
+        self.seed = seed
+        self.builder_kwargs = builder_kwargs
+        self._cache: dict[IndexSpec, VectorIndex] = {}
+
+    def get(self, spec: IndexSpec) -> VectorIndex:
+        if spec not in self._cache:
+            builder = BUILDERS[spec.kind]
+            data = self.db.concat(spec.vid)
+            kw = dict(self.builder_kwargs)
+            if len(spec.vid) > 1 and spec.kind in ("hnsw", "diskann"):
+                kw["col_dims"] = [self.db.dims[c] for c in spec.vid]
+            self._cache[spec] = builder(data, seed=self.seed, **kw)
+        return self._cache[spec]
+
+    def __contains__(self, spec: IndexSpec) -> bool:
+        return spec in self._cache
+
+    def built_specs(self) -> list[IndexSpec]:
+        return list(self._cache)

@@ -1,0 +1,28 @@
+"""Shared Pallas kernel utilities.
+
+TPU v5e is the compilation target (MXU 128×128, VMEM ~16MiB); on this CPU
+container every kernel runs through ``interpret=True``, which executes the
+kernel body in Python and validates indexing/semantics exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0.0) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

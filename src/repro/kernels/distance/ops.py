@@ -1,0 +1,21 @@
+"""Jitted public ops for the distance kernel: fused scan = scores + top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance.kernel import batched_scores
+from repro.kernels.topk.kernel import topk_scores
+
+
+def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
+               interpret: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The TPU-native index scan: (B, d) queries over (N, d) rows -> top-k
+    (values, indices). Composition of the MXU distance kernel and the
+    streaming top-k kernel; this is exactly MINT's cost unit
+    (numDist = N, cost = dim * N) realized as hardware matmuls."""
+    scores = batched_scores(q, db, metric=metric, interpret=interpret)
+    return topk_scores(scores, k, interpret=interpret)
+
+
+__all__ = ["batched_scores", "fused_scan"]

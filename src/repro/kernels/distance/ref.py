@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused batched score kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_scores_ref(q: jnp.ndarray, db: jnp.ndarray,
+                       metric: str = "dot") -> jnp.ndarray:
+    """q: (B, d); db: (N, d) -> (B, N) scores (higher = more similar)."""
+    q32 = q.astype(jnp.float32)
+    db32 = db.astype(jnp.float32)
+    if metric == "dot":
+        return q32 @ db32.T
+    if metric == "cosine":
+        qn = q32 / jnp.maximum(jnp.linalg.norm(q32, axis=-1, keepdims=True), 1e-12)
+        dn = db32 / jnp.maximum(jnp.linalg.norm(db32, axis=-1, keepdims=True), 1e-12)
+        return qn @ dn.T
+    if metric == "l2":
+        # negative squared distance so "higher is better" everywhere
+        q2 = jnp.sum(q32 * q32, axis=-1, keepdims=True)
+        d2 = jnp.sum(db32 * db32, axis=-1)
+        return -(q2 - 2.0 * (q32 @ db32.T) + d2[None, :])
+    raise ValueError(f"unknown metric {metric!r}")

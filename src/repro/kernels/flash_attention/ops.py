@@ -1,0 +1,4 @@
+"""Jitted public op for flash attention."""
+from repro.kernels.flash_attention.kernel import flash_attention
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,4 @@
+"""Jitted public op for streaming top-k."""
+from repro.kernels.topk.kernel import topk_scores
+
+__all__ = ["topk_scores"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for blockwise top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, N) -> (values (B, k), indices (B, k)), best first."""
+    return jax.lax.top_k(scores.astype(jnp.float32), k)

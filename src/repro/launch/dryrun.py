@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the 512
+placeholder host devices let jax.make_mesh build the production meshes; all
+inputs are ShapeDtypeStruct stand-ins (no allocation); ``.compile()``
+succeeding means sharding propagation, collectives, and memory planning all
+close. Results (memory_analysis, cost_analysis, collective schedule,
+roofline terms) stream into a JSON file consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --out experiments/dryrun.json
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, get_arch, input_specs, list_archs
+from repro.distributed.sharding import (cache_shardings, param_shardings,
+                                        use_mesh, _dp_axes)
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.roofline import (Roofline, collective_bytes, extract_cost,
+                                   extract_memory)
+from repro.models import model as M
+from repro.train.optimizer import adamw_init, zero1_shardings
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(M.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _dp_total(mesh):
+    return mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+
+def batch_shardings(mesh, specs: dict, *, long_context: bool):
+    dp = _dp_axes(mesh)
+    total = _dp_total(mesh)
+
+    def spec_of(name, leaf):
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        if leaf.shape and leaf.shape[0] % total == 0:
+            return NamedSharding(mesh, P(*((dp,) + (None,) * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*((None,) * leaf.ndim)))
+
+    return {k: (cache_shardings(v, mesh, shard_seq=long_context)
+                if k == "cache" else
+                jax.tree.map(lambda leaf, kk=k: spec_of(kk, leaf), v))
+            for k, v in specs.items()}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             bf16_grads: bool = True, sharding_mode: str = "tp",
+             moe_impl: str | None = None, kv_dtype: str | None = None) -> dict:
+    import dataclasses
+    cfg = get_arch(arch)
+    if moe_impl and cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "sharding": sharding_mode, "bf16_grads": bf16_grads,
+                 "moe_impl": moe_impl or (cfg.moe_impl if cfg.n_experts else None),
+                 "kv_dtype": kv_dtype or "bf16"}
+    if not cfg.supports(shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = cfg.skip_reason(shape_name)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    params_abs = abstract_params(cfg)
+    n_params = int(sum(x.size for x in jax.tree.leaves(params_abs)))
+    n_active = n_params
+    if cfg.n_experts:
+        expert = sum(x.size for p, x in
+                     jax.tree_util.tree_leaves_with_path(params_abs)
+                     if "w_gate" in str(p) or "w_down" in str(p))
+        n_active = int(n_params - expert * (1 - cfg.moe_top_k / cfg.n_experts))
+    rec["n_params"] = n_params
+    rec["n_active_params"] = n_active
+
+    specs = input_specs(cfg, shape, kv_dtype=kv_dtype)
+    long_context = shape_name == "long_500k"
+
+    with use_mesh(mesh), mesh:
+        p_sh = param_shardings(params_abs, mesh, mode=sharding_mode)
+        b_sh = batch_shardings(mesh, specs, long_context=long_context)
+
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            zs = zero1_shardings(p_sh, params_abs, mesh)
+            o_sh = type(opt_abs)(step=NamedSharding(mesh, P()), m=zs, v=zs)
+            step = make_train_step(cfg, bf16_grads=bf16_grads)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+            # tokens processed per step (for MODEL_FLOPS = 6·N·D)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * n_active * tokens
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_abs, specs)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * n_active * tokens
+        else:  # decode
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, b_sh["cache"],
+                                           b_sh["tokens"], b_sh["pos"]),
+                             out_shardings=(None, b_sh["cache"]),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, specs["cache"],
+                                   specs["tokens"], specs["pos"])
+            tokens = shape.global_batch  # one token per sequence
+            model_flops = 2.0 * n_active * tokens
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = extract_memory(compiled)
+        cost = extract_cost(compiled)
+        hlo = compiled.as_text()
+        colls = collective_bytes(hlo)
+        rl = Roofline(flops=cost["flops"], hbm_bytes=cost["bytes"],
+                      coll_bytes=colls["total_bytes"],
+                      model_flops=model_flops / chips, chips=chips)
+        rec.update(status="ok", chips=chips, memory=mem,
+                   cost={"flops": cost["flops"], "bytes": cost["bytes"]},
+                   collectives=colls, roofline=rl.as_dict(),
+                   hlo_bytes=len(hlo))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--no-bf16-grads", action="store_true")
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--moe-impl", default=None, choices=[None, "dense", "sorted"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    if args.seq_parallel:
+        from repro.distributed.sharding import set_sequence_parallel
+        set_sequence_parallel(True)
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = (arch, shape, "2x16x16" if multi else "16x16")
+                if key in done:
+                    print(f"[skip-done] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi,
+                                   bf16_grads=not args.no_bf16_grads,
+                                   sharding_mode=args.sharding,
+                                   moe_impl=args.moe_impl,
+                                   kv_dtype="int8" if args.kv_int8 else None)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": key[2],
+                           "status": "error", "error": str(e)[:2000],
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec.get("status")
+                if status == "ok":
+                    rl = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"dominant={rl['dominant']} "
+                          f"frac={rl['roofline_fraction']:.3f} "
+                          f"mem={rec['memory'].get('total_device_bytes', 0)/2**30:.2f}GiB",
+                          flush=True)
+                else:
+                    print(f"  {status}: {rec.get('reason', rec.get('error', ''))[:200]}",
+                          flush=True)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skipped")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (TPU v5e targets):
+  compute    = FLOPs / peak_FLOPs            (197 TFLOP/s bf16 per chip)
+  memory     = bytes accessed / HBM_bw       (819 GB/s per chip)
+  collective = collective bytes / link_bw    (~50 GB/s per ICI link)
+
+``cost_analysis`` describes the per-device SPMD program, so terms are
+per-chip seconds directly. Collective bytes are parsed from the optimized
+HLO text: the RESULT buffer size of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (documented proxy for
+operand bytes; exact for all-reduce, upper bound for all-gather).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[sub]\d+|bf16|f\d+|c\d+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    by_kind: dict[str, dict] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        by_kind[kind]["count"] += 1
+        by_kind[kind]["bytes"] += _shape_bytes(shape_str)
+    total = sum(v["bytes"] for v in by_kind.values())
+    return {"by_kind": by_kind, "total_bytes": total}
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    model_flops: float          # 6·N·D (train) or 2·N·D (decode), per chip
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / HW["peak_flops"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / HW["link_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful compute time / total bound time (the perf score)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return (self.model_flops / HW["peak_flops"]) / max(bound, 1e-12)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def extract_cost(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = dict(ca or {})
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "raw_keys": sorted(ca)[:40]}
+
+
+def extract_memory(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_device_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                 + out.get("output_size_in_bytes", 0)
+                                 + out.get("temp_size_in_bytes", 0)
+                                 - out.get("alias_size_in_bytes", 0))
+    return out

@@ -1,0 +1,89 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Dry-run of the distributed vector-search serving plane (MINT's runtime).
+
+Lowers ``search_step`` on the production mesh with a ShapeDtypeStruct
+database and measures the collective schedule — the §Perf pair most
+representative of the paper's technique:
+
+  baseline  : gather-scores merge — every shard all-gathers its full local
+              score matrix (Q, N_local) before the global top-k (the naive
+              distributed top-k).
+  optimized : tournament merge — per-shard local top-k first; only (Q, k)
+              candidates cross the network.
+
+Predicted collective ratio ≈ N_local / k (napkin math in EXPERIMENTS §Perf).
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes, extract_cost
+from repro.search.distributed import make_search_step
+
+
+def make_naive_search_step(mesh, k: int, axis: str = "data"):
+    def step(db, qvecs):
+        def shard_fn(db_local, q_local):
+            scores = q_local @ db_local.T                   # (Q, N_local)
+            all_scores = jax.lax.all_gather(scores, axis)   # (S, Q, N_local)
+            S, Q, NL = all_scores.shape
+            flat = jnp.moveaxis(all_scores, 0, 1).reshape(Q, S * NL)
+            vals, ids = jax.lax.top_k(flat, k)
+            return vals, ids
+
+        return shard_map(shard_fn, mesh=mesh, in_specs=(P(axis, None), P()),
+                         out_specs=(P(), P()), check_rep=False)(db, qvecs)
+    return step
+
+
+def lower_variant(name, step_fn, mesh, n_rows, dim, n_queries):
+    db = jax.ShapeDtypeStruct((n_rows, dim), jnp.float32)
+    q = jax.ShapeDtypeStruct((n_queries, dim), jnp.float32)
+    with mesh:
+        jitted = jax.jit(step_fn,
+                         in_shardings=(NamedSharding(mesh, P("data", None)),
+                                       NamedSharding(mesh, P())))
+        compiled = jitted.lower(db, q).compile()
+    colls = collective_bytes(compiled.as_text())
+    cost = extract_cost(compiled)
+    return {"variant": name, "collectives": colls, "cost": cost}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1 << 24)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=1024)
+    ap.add_argument("--k", type=int, default=100)
+    ap.add_argument("--out", default="experiments/search_dryrun.json")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    out = []
+    for name, fn in [("naive_gather_scores",
+                      make_naive_search_step(mesh, args.k)),
+                     ("tournament_topk",
+                      make_search_step(mesh, args.k))]:
+        rec = lower_variant(name, fn, mesh, args.rows, args.dim, args.queries)
+        rec.update(rows=args.rows, dim=args.dim, queries=args.queries, k=args.k,
+                   mesh="2x16x16" if args.multi_pod else "16x16")
+        out.append(rec)
+        tb = rec["collectives"]["total_bytes"]
+        print(f"{name}: collective_bytes={tb/2**30:.3f} GiB "
+              f"flops={rec['cost']['flops']:.3e}")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

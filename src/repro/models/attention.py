@@ -1,0 +1,168 @@
+"""GQA attention with a lowering-safe chunked (flash-style) path.
+
+Memory never exceeds O(q_chunk × kv_chunk) per head — mandatory for the
+32k-prefill and 500k-decode dry-run shapes. The Pallas flash kernel
+(kernels/flash_attention) is the TPU fast path for the same math; models
+use this pure-JAX version so every dry-run lowers on any backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(-3.0e38)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, Hkv, d)
+    v: jnp.ndarray  # (B, S_max, Hkv, d)
+
+
+def _attn_chunk(q, k, v, qpos, kpos, *, causal, window, cap, scale):
+    """q: (B, Q, Hkv, G, d); k/v: (B, Kc, Hkv, d) -> partial (o, m, l)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    # window may be a traced per-layer scalar (gemma2 alternation); a huge
+    # window value is a no-op, so the mask is applied unconditionally
+    mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                        # (B,H,G,Q)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o, m, l
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window=1 << 30, softcap: float = 0.0,
+                      q_offset: int = 0, kv_len: int | None = None,
+                      q_chunk: int = 1024, kv_chunk: int = 2048,
+                      k_scale: jnp.ndarray | None = None,
+                      v_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q: (B, Sq, Hq, d); k/v: (B, Skv, Hkv, d) -> (B, Sq, Hq, d).
+
+    q position i is global position q_offset + i. ``kv_len`` masks cache
+    padding (positions >= kv_len are invalid). ``k_scale``/``v_scale``
+    (B, Skv, Hkv) dequantize int8 KV caches chunk-by-chunk inside the scan —
+    the full cache never materializes above int8."""
+    B, Sq, Hq, d = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = d ** -0.5
+    kv_len = Skv if kv_len is None else kv_len
+    qg = q.reshape(B, Sq, Hkv, G, d)
+    quant = k_scale is not None
+
+    n_kv = -(-Skv // kv_chunk)
+    kv_pad = n_kv * kv_chunk - Skv
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        if quant:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, kv_pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, kv_pad), (0, 0)))
+    k = k.reshape(B, n_kv, kv_chunk, Hkv, d)
+    v = v.reshape(B, n_kv, kv_chunk, Hkv, d)
+    if quant:
+        k_scale = k_scale.reshape(B, n_kv, kv_chunk, Hkv)
+        v_scale = v_scale.reshape(B, n_kv, kv_chunk, Hkv)
+
+    def per_q_chunk(q_chunk_arr, q_start):
+        Qc = q_chunk_arr.shape[1]
+        qpos = q_offset + q_start + jnp.arange(Qc)
+
+        def body(carry, kv):
+            o, m, l = carry
+            if quant:
+                (kc, vc, ksc, vsc, j) = kv
+                kc = kc.astype(jnp.float32) * ksc[..., None]
+                vc = vc.astype(jnp.float32) * vsc[..., None]
+            else:
+                (kc, vc, j) = kv
+            kpos = j * kv_chunk + jnp.arange(kv_chunk)
+            kpos = jnp.where(kpos < kv_len, kpos, kv_len + Skv + 10)  # mask pad
+            oc, mc, lc = _attn_chunk(q_chunk_arr, kc, vc, qpos, kpos,
+                                     causal=causal, window=window,
+                                     cap=softcap, scale=scale)
+            m_new = jnp.maximum(m, mc)
+            alpha = jnp.exp(m - m_new)
+            beta = jnp.exp(mc - m_new)
+            l_new = l * alpha + lc * beta
+            o_new = o * alpha[..., None] + oc * beta[..., None]
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((B, Hkv, G, Qc, d), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, Qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, Qc), jnp.float32)
+        ks = jnp.moveaxis(k, 1, 0)  # (n_kv, B, kv_chunk, Hkv, d)
+        vs = jnp.moveaxis(v, 1, 0)
+        if quant:
+            xs = (ks, vs, jnp.moveaxis(k_scale, 1, 0),
+                  jnp.moveaxis(v_scale, 1, 0), jnp.arange(n_kv))
+        else:
+            xs = (ks, vs, jnp.arange(n_kv))
+        (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), xs)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1).reshape(B, Qc, Hq, d)  # (B,Qc,Hq,d)
+
+    if Sq <= q_chunk:
+        return per_q_chunk(qg, 0).astype(q.dtype)
+    n_q = -(-Sq // q_chunk)
+    q_pad = n_q * q_chunk - Sq
+    if q_pad:
+        qg = jnp.pad(qg, ((0, 0), (0, q_pad), (0, 0), (0, 0), (0, 0)))
+    qs = jnp.moveaxis(qg.reshape(B, n_q, q_chunk, Hkv, G, d), 1, 0)
+
+    def q_body(_, qi_and_idx):
+        q_i, i = qi_and_idx
+        return None, per_q_chunk(q_i, i * q_chunk)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(n_q)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_q * q_chunk, Hq, d)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def dense_attention(q, k, v, *, causal=True, window=1 << 30, softcap=0.0,
+                    q_offset=0, kv_len=None, k_scale=None, v_scale=None):
+    """Small-S path (cheap compile for smoke tests): same semantics."""
+    if k_scale is not None:  # int8 cache: dequant upfront (small shapes only)
+        k = k.astype(jnp.float32) * k_scale[..., None]
+        v = v.astype(jnp.float32) * v_scale[..., None]
+    B, Sq, Hq, d = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = d ** -0.5
+    kv_len = Skv if kv_len is None else kv_len
+    qg = q.reshape(B, Sq, Hkv, G, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = kpos[None, :] < kv_len
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    else:
+        mask = jnp.broadcast_to(mask, (Sq, Skv))
+    mask &= kpos[None, :] > qpos[:, None] - window  # huge window == no-op
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, Hq, d).astype(q.dtype)
+
+
+def attention(q, k, v, **kw):
+    """Dispatch: dense for short sequences, chunked above 2k."""
+    if q.shape[1] * k.shape[1] <= 2048 * 2048 and k.shape[1] <= 8192:
+        return dense_attention(q, k, v, **kw)
+    return chunked_attention(q, k, v, **kw)

@@ -1,0 +1,67 @@
+"""Shared model components: norms, rotary embeddings (incl. M-RoPE), init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4,
+               sections: tuple[int, ...] = ()) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, d). positions: (B, S) or (B, S, 3)
+    for M-RoPE (Qwen2-VL), where ``sections`` splits d/2 frequency pairs
+    into (t, h, w) groups, each rotated by its own position stream."""
+    B, S, H, d = x.shape
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    if positions.ndim == 2:
+        ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    else:
+        # M-RoPE: section s of the frequency pairs uses position stream s
+        n_pairs = d // 2
+        sec = jnp.zeros((n_pairs,), dtype=jnp.int32)
+        start = 0
+        for si, width in enumerate(sections):
+            sec = sec.at[start:start + width].set(si)
+            start += width
+        pos_sel = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec[None, None, :], (B, S, n_pairs)).astype(jnp.int32),
+            axis=2)  # (B, S, d/2)
+        ang = pos_sel * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

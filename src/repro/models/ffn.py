@@ -1,0 +1,24 @@
+"""Gated MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    dt = x.dtype
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    return h @ params["w_down"].astype(dt)

@@ -1,0 +1,673 @@
+"""Model builder: init / train_loss / prefill / decode_step for all 10
+assigned architectures, dispatched on ``ArchConfig.family``.
+
+Layer stacks are ``lax.scan`` over stacked per-layer params (small HLO, fast
+compiles at 512 devices); heterogeneous stacks (zamba2 groups, xlstm
+super-blocks) scan over their repeating unit. KV/state caches are stacked
+along the layer axis and threaded through the scans as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.common import apply_rope, dense_init, rms_norm, softcap
+
+ACT_DTYPE = jnp.bfloat16
+NO_WINDOW = 1 << 30
+
+
+# --------------------------------------------------------------------------
+# per-layer params
+# --------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ArchConfig, dtype=jnp.float32):
+    hd, Hq, Hkv, D = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (D, Hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (D, Hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (Hq * hd, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def _init_attn_mlp_layer(key, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn": _init_attn(ks[0], cfg),
+        "ln_attn": jnp.zeros((cfg.d_model,)),
+        "ln_mlp": jnp.zeros((cfg.d_model,)),
+    }
+    if cfg.sandwich_norm:
+        p["ln_attn_post"] = jnp.zeros((cfg.d_model,))
+        p["ln_mlp_post"] = jnp.zeros((cfg.d_model,))
+    if cross:
+        p["cross"] = _init_attn(ks[1], cfg)
+        p["ln_cross"] = jnp.zeros((cfg.d_model,))
+    if cfg.n_experts:
+        p["moe"] = MOE.init_moe(ks[2], cfg.d_model, cfg.n_experts,
+                                cfg.expert_dff, cfg.moe_top_k)
+    elif cfg.d_ff:
+        p["mlp"] = F.init_mlp(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _stack_init(key, n: int, fn):
+    keys = jax.random.split(key, n)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(k) for k in keys])
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), in_axis=1),
+        "ln_final": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: _init_attn_mlp_layer(k, cfg))
+    elif cfg.family == "hybrid":  # zamba2
+        n_groups = cfg.n_layers // cfg.attn_every
+        leftover = cfg.n_layers - n_groups * cfg.attn_every
+        params["mamba_groups"] = _stack_init(
+            ks[2], n_groups,
+            lambda k: _stack_init(k, cfg.attn_every, lambda k2: {
+                "m": SSM.init_mamba2(k2, cfg.d_model, cfg.ssm_state,
+                                     cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_conv),
+                "ln": jnp.zeros((cfg.d_model,))}))
+        if leftover:
+            params["mamba_tail"] = _stack_init(
+                ks[3], leftover, lambda k: {
+                    "m": SSM.init_mamba2(k, cfg.d_model, cfg.ssm_state,
+                                         cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_conv),
+                    "ln": jnp.zeros((cfg.d_model,))})
+        params["shared_attn"] = _init_attn_mlp_layer(ks[4], cfg)
+    elif cfg.family == "ssm":  # xlstm
+        n_super = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        params["super"] = _stack_init(
+            ks[2], n_super, lambda k: {
+                "mlstm": _stack_init(k, n_m, lambda k2: {
+                    "x": XL.init_mlstm(k2, cfg.d_model, cfg.n_heads,
+                                       cfg.proj_factor),
+                    "ln": jnp.zeros((cfg.d_model,))}),
+                "slstm": {"x": XL.init_slstm(jax.random.fold_in(k, 7), cfg.d_model),
+                          "ln": jnp.zeros((cfg.d_model,))},
+            })
+    elif cfg.family == "encdec":  # whisper
+        params["enc_layers"] = _stack_init(
+            ks[2], cfg.n_enc_layers, lambda k: _init_attn_mlp_layer(k, cfg))
+        params["dec_layers"] = _stack_init(
+            ks[3], cfg.n_layers, lambda k: _init_attn_mlp_layer(k, cfg, cross=True))
+        params["ln_enc"] = jnp.zeros((cfg.d_model,))
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def active_param_count(cfg: ArchConfig, params) -> int:
+    """MoE: router + active experts fraction; dense: everything."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+    expert = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if any("w_gate" in str(p) or "w_down" in str(p) for p in path):
+            expert += leaf.size
+    return int(total - expert * (1 - cfg.moe_top_k / cfg.n_experts))
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+
+def _quantize_kv(t):
+    """per-(token, head) symmetric int8: returns (int8 values, f32 scales)."""
+    s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _attn(cfg: ArchConfig, p, x, positions, *, window, causal=True,
+          kv_cache=None, pos=None, kv_override=None):
+    """x: (B,S,D). kv_cache: (k, v[, k_scale, v_scale]) of (B,Smax,Hkv,hd)
+    to read+update at pos (int8 + scales when quantized).
+    kv_override: precomputed (k, v) (cross attention)."""
+    B, S, D = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(B, S, Hq, hd)
+
+    if kv_override is None:
+        k = x @ p["wk"].astype(dt)
+        v = x @ p["wv"].astype(dt)
+        if "bk" in p:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        new_kv = None
+        scales = (None, None)
+        if kv_cache is not None:
+            if len(kv_cache) == 4 and kv_cache[2] is not None:  # int8 cache
+                ck, cv, cks, cvs = kv_cache
+                kq, ks_new = _quantize_kv(k)
+                vq, vs_new = _quantize_kv(v)
+                ck = jax.lax.dynamic_update_slice(ck, kq, (0, pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, vq, (0, pos, 0, 0))
+                cks = jax.lax.dynamic_update_slice(
+                    cks, ks_new.astype(cks.dtype), (0, pos, 0))
+                cvs = jax.lax.dynamic_update_slice(
+                    cvs, vs_new.astype(cvs.dtype), (0, pos, 0))
+                new_kv = (ck, cv, cks, cvs)
+                k, v = ck, cv
+                scales = (cks, cvs)
+            else:
+                ck, cv = kv_cache[:2]
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, pos, 0, 0))
+                new_kv = (ck, cv)
+                k, v = ck, cv
+            kv_len = pos + S
+        else:
+            kv_len = S
+        q_offset = pos if kv_cache is not None else 0
+    else:
+        k, v = kv_override
+        new_kv = None
+        scales = (None, None)
+        kv_len = k.shape[1]
+        q_offset = 0
+        causal = False
+
+    if scales[0] is not None:
+        out = A.attention(q, k, v, causal=causal, window=window,
+                          softcap=cfg.attn_softcap, q_offset=q_offset,
+                          kv_len=kv_len, k_scale=scales[0], v_scale=scales[1])
+    else:
+        out = A.attention(q, k.astype(dt), v.astype(dt), causal=causal,
+                          window=window, softcap=cfg.attn_softcap,
+                          q_offset=q_offset, kv_len=kv_len)
+    out = out.reshape(B, S, Hq * hd) @ p["wo"].astype(dt)
+    return out, new_kv
+
+
+def _attn_mlp_block(cfg: ArchConfig, p, x, positions, *, window, kv_cache=None,
+                    pos=None, causal=True, cross_kv=None):
+    h, new_kv = _attn(cfg, p["attn"], rms_norm(x, p["ln_attn"], cfg.norm_eps),
+                      positions, window=window, causal=causal,
+                      kv_cache=kv_cache, pos=pos)
+    if cfg.sandwich_norm:
+        h = rms_norm(h, p["ln_attn_post"], cfg.norm_eps)
+    x = x + h
+    new_cross = None
+    if "cross" in p:
+        h, _ = _attn(cfg, p["cross"], rms_norm(x, p["ln_cross"], cfg.norm_eps),
+                     positions, window=window, kv_override=cross_kv)
+        x = x + h
+    aux = 0.0
+    h_in = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.n_experts:
+        h, aux = MOE.moe(p["moe"], h_in, cfg.moe_top_k, cfg.moe_impl)
+    else:
+        h = F.mlp(p["mlp"], h_in, cfg.mlp_act)
+    if cfg.sandwich_norm:
+        h = rms_norm(h, p["ln_mlp_post"], cfg.norm_eps)
+    x = x + h
+    x = shard_act(x, "btd")
+    return x, new_kv, aux
+
+
+def _layer_windows(cfg: ArchConfig, n: int) -> jnp.ndarray:
+    """Per-layer attention window (traced through the scan): gemma2
+    alternates local/global; everyone else is global."""
+    if cfg.alt_local_global and cfg.sliding_window:
+        idx = jnp.arange(n)
+        return jnp.where(idx % 2 == 0, cfg.sliding_window, NO_WINDOW)
+    return jnp.full((n,), NO_WINDOW, jnp.int32)
+
+
+def _scan_layers(cfg: ArchConfig, stacked, x, positions, *, kv_cache=None,
+                 pos=None, causal=True, cross_kv=None):
+    """Scan a homogeneous attn(+cross)+mlp stack. kv_cache: stacked (L,...)."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    windows = _layer_windows(cfg, n)
+
+    def body(carry, per_layer):
+        x, aux = carry
+        if cross_kv is not None:
+            p, w, kv, ckv = per_layer
+        else:
+            p, w, kv = per_layer
+            ckv = None
+        x, new_kv, a = _attn_mlp_block(cfg, p, x, positions, window=w,
+                                       kv_cache=kv, pos=pos, causal=causal,
+                                       cross_kv=ckv)
+        return (x, aux + a), new_kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs: tuple = (stacked, windows)
+    xs += (kv_cache if kv_cache is not None else None,)
+    if cross_kv is not None:
+        xs += (cross_kv,)
+    (x, aux), new_cache = jax.lax.scan(body, (x, 0.0), xs)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# family forwards (shared by train / prefill / decode)
+# --------------------------------------------------------------------------
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    x = params["embed"].astype(ACT_DTYPE)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, ACT_DTYPE)
+    return shard_act(x, "btd")
+
+
+def _logits(cfg: ArchConfig, params, x):
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return shard_act(logits, "btv")
+
+
+def _positions_for(cfg: ArchConfig, B, S, offset=0):
+    pos = offset + jnp.arange(S)[None, :]
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[:, :, None], (B, S, 3))
+    return pos
+
+
+def _vlm_positions(cfg: ArchConfig, B, n_vis, S_text):
+    """M-RoPE: grid (t=0, h=row, w=col) for the vision prefix, collapsed
+    text positions after."""
+    side = max(1, int(n_vis ** 0.5))
+    vi = jnp.arange(n_vis)
+    vis = jnp.stack([jnp.zeros_like(vi), vi // side, vi % side], axis=-1)
+    ti = 1 + jnp.arange(S_text)
+    txt = jnp.stack([ti, ti, ti], axis=-1)
+    pos = jnp.concatenate([vis, txt], axis=0)[None]
+    return jnp.broadcast_to(pos, (B, n_vis + S_text, 3))
+
+
+def forward_core(cfg: ArchConfig, params, x, positions, *, cache=None, pos=0,
+                 batch=None):
+    """Runs the body stack. Returns (hidden, new_cache, aux_loss)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        if cache is None:
+            kv = None
+        elif "k_scale" in cache:
+            kv = (cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+        else:
+            kv = (cache["k"], cache["v"])
+        x, new_kv, aux = _scan_layers(cfg, params["layers"], x, positions,
+                                      kv_cache=kv, pos=pos)
+        if new_kv is None:
+            new_cache = None
+        elif len(new_kv) == 4:
+            new_cache = {"k": new_kv[0], "v": new_kv[1],
+                         "k_scale": new_kv[2], "v_scale": new_kv[3]}
+        else:
+            new_cache = {"k": new_kv[0], "v": new_kv[1]}
+        if cache is not None and new_cache is None:
+            new_cache = cache
+        return x, new_cache, aux
+
+    if fam == "hybrid":
+        return _zamba_forward(cfg, params, x, positions, cache=cache, pos=pos)
+
+    if fam == "ssm":
+        return _xlstm_forward(cfg, params, x, cache=cache)
+
+    if fam == "encdec":
+        raise RuntimeError("encdec handled in train_loss/prefill/decode")
+    raise ValueError(fam)
+
+
+def _zamba_forward(cfg: ArchConfig, params, x, positions, *, cache=None, pos=0):
+    n_groups = cfg.n_layers // cfg.attn_every
+    leftover = cfg.n_layers - n_groups * cfg.attn_every
+    aux_total = 0.0
+
+    ssm_cache = None if cache is None else cache["ssm"]       # stacked (L, ...)
+    attn_k = None if cache is None else cache["k"]            # (G, B, S, H, d)
+    attn_v = None if cache is None else cache["v"]
+
+    def mamba_seq(x, stacked_params, caches):
+        def body(x, per):
+            p, c = per
+            h, new_c = SSM.mamba2_forward(
+                p["m"], rms_norm(x, p["ln"], cfg.norm_eps), cfg.ssm_state,
+                cfg.ssm_expand, cfg.ssm_headdim, cache=c)
+            return x + h, new_c
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        return jax.lax.scan(body, x, (stacked_params, caches))
+
+    def group_body(carry, per_group):
+        x, aux = carry
+        gp, g_ssm_cache, g_kv = per_group
+        x, new_ssm = mamba_seq(x, gp["mamba"], g_ssm_cache)
+        x, new_kv, a = _attn_mlp_block(
+            cfg, params["shared_attn"], x, positions,
+            window=jnp.asarray(NO_WINDOW), kv_cache=g_kv, pos=pos)
+        return (x, aux + a), (new_ssm, new_kv)
+
+    G = n_groups
+    grouped = {"mamba": params["mamba_groups"]}
+    g_ssm = (None if ssm_cache is None else jax.tree.map(
+        lambda t: t[: G * cfg.attn_every].reshape(
+            (G, cfg.attn_every) + t.shape[1:]), ssm_cache))
+    g_kv = None if attn_k is None else (attn_k, attn_v)
+
+    xs = ({"mamba": params["mamba_groups"]}, g_ssm, g_kv)
+    (x, aux_total), (new_ssm_g, new_kv_g) = jax.lax.scan(group_body, (x, 0.0), xs)
+
+    new_cache = None
+    tail_new = None
+    if leftover:
+        tail_cache = (None if ssm_cache is None else jax.tree.map(
+            lambda t: t[G * cfg.attn_every:], ssm_cache))
+        x, tail_new = mamba_seq(x, params["mamba_tail"], tail_cache)
+
+    if cache is not None:
+        flat_ssm = jax.tree.map(
+            lambda t: t.reshape((G * cfg.attn_every,) + t.shape[2:]), new_ssm_g)
+        if leftover:
+            flat_ssm = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), flat_ssm, tail_new)
+        new_cache = {"ssm": flat_ssm, "k": new_kv_g[0], "v": new_kv_g[1]}
+    return x, new_cache, aux_total
+
+
+def _xlstm_forward(cfg: ArchConfig, params, x, *, cache=None):
+    mc = None if cache is None else cache["mlstm"]  # stacked (n_super, n_m, ...)
+    sc = None if cache is None else cache["slstm"]  # stacked (n_super, ...)
+
+    def super_body(x, per):
+        p, m_cache, s_cache = per
+
+        def m_body(x, inner):
+            pp, cc = inner
+            h, new_c = XL.mlstm_forward(pp["x"], rms_norm(x, pp["ln"], cfg.norm_eps),
+                                        cfg.n_heads, cache=cc)
+            return x + h, new_c
+
+        x, new_m = jax.lax.scan(m_body, x, (p["mlstm"], m_cache))
+        h, new_s = XL.slstm_forward(p["slstm"]["x"],
+                                    rms_norm(x, p["slstm"]["ln"], cfg.norm_eps),
+                                    cache=s_cache)
+        return x + h, (new_m, new_s)
+
+    if cfg.remat:
+        super_body = jax.checkpoint(super_body, prevent_cse=False)
+    x, (new_m, new_s) = jax.lax.scan(super_body, x, (params["super"], mc, sc))
+    new_cache = None if cache is None else {"mlstm": new_m, "slstm": new_s}
+    return x, new_cache, 0.0
+
+
+# --------------------------------------------------------------------------
+# public API: train_loss / prefill / decode_step
+# --------------------------------------------------------------------------
+
+
+def _xent_loss(cfg, params, hidden, targets, mask, chunk=512):
+    """Sequence-chunked cross entropy (never materializes (B,S,V) at once)."""
+    B, S, D = hidden.shape
+    n = max(1, S // chunk)
+    csize = S // n if S % n == 0 else S
+    if S % max(csize, 1) != 0:
+        csize = S
+        n = 1
+    h = hidden.reshape(B, n, csize, D)
+    t = targets.reshape(B, n, csize)
+    m = mask.reshape(B, n, csize)
+
+    def body(carry, inp):
+        hc, tc, mc = inp
+        logits = _logits(cfg, params, hc)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        zloss = 1e-4 * (logz ** 2) * mc
+        return (carry[0] + jnp.sum(nll + zloss), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (0.0, 0.0),
+        (jnp.moveaxis(h, 1, 0), jnp.moveaxis(t, 1, 0), jnp.moveaxis(m, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(cfg: ArchConfig, params, batch: dict) -> jnp.ndarray:
+    if cfg.family == "encdec":
+        return _whisper_loss(cfg, params, batch)
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(ACT_DTYPE)
+        txt = _embed(cfg, params, tokens)
+        x = jnp.concatenate([vis, txt], axis=1)
+        positions = _vlm_positions(cfg, B, vis.shape[1], tokens.shape[1])
+        # loss only on text positions
+        S = x.shape[1]
+        tgt = jnp.concatenate(
+            [jnp.zeros((B, vis.shape[1]), jnp.int32), tokens], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, vis.shape[1])), jnp.ones_like(tokens, jnp.float32)],
+            axis=1)
+    else:
+        x = _embed(cfg, params, tokens)
+        positions = _positions_for(cfg, B, tokens.shape[1])
+        tgt = tokens
+        mask = jnp.ones_like(tokens, jnp.float32)
+
+    h, _, aux = forward_core(cfg, params, x, positions)
+    h = rms_norm(h, params["ln_final"], cfg.norm_eps)
+    # next-token prediction: shift targets left
+    tgt_shift = jnp.concatenate([tgt[:, 1:], tgt[:, :1]], axis=1)
+    mask_shift = jnp.concatenate(
+        [mask[:, 1:] * mask[:, :-1], jnp.zeros_like(mask[:, :1])], axis=1)
+    loss = _xent_loss(cfg, params, h, tgt_shift, mask_shift)
+    return loss + 0.01 * aux
+
+
+def _whisper_encode(cfg, params, frames):
+    x = shard_act(frames.astype(ACT_DTYPE), "btd")
+    pos = _positions_for(cfg, frames.shape[0], frames.shape[1])
+    x, _, _ = _scan_layers(cfg, params["enc_layers"], x, pos, causal=False)
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _whisper_cross_kv(cfg, params, enc):
+    """Per-decoder-layer cross K/V from the encoder output (stacked)."""
+    B, Se, D = enc.shape
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+
+    def one(p):
+        k = (enc @ p["cross"]["wk"].astype(enc.dtype)).reshape(B, Se, Hkv, hd)
+        v = (enc @ p["cross"]["wv"].astype(enc.dtype)).reshape(B, Se, Hkv, hd)
+        return k, v
+
+    return jax.vmap(one, in_axes=(0,))(params["dec_layers"])
+
+
+def _whisper_loss(cfg, params, batch):
+    enc = _whisper_encode(cfg, params, batch["frames"])
+    ck, cv = _whisper_cross_kv(cfg, params, enc)
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens)
+    pos = _positions_for(cfg, tokens.shape[0], tokens.shape[1])
+    x, _, _ = _scan_layers(cfg, params["dec_layers"], x, pos, causal=True,
+                           cross_kv=(ck, cv))
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate([jnp.ones_like(tokens[:, 1:], jnp.float32),
+                            jnp.zeros((tokens.shape[0], 1))], axis=1)
+    return _xent_loss(cfg, params, x, tgt, mask)
+
+
+# ---- caches ----
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, dtype=ACT_DTYPE,
+                kv_dtype=None):
+    """ShapeDtypeStructs for the decode cache of (cfg, batch, max_len)."""
+    return make_cache(cfg, batch, max_len, dtype, abstract=True,
+                      kv_dtype=kv_dtype)
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=ACT_DTYPE,
+               abstract: bool = False, kv_dtype=None):
+    def arr(shape, dt=dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    B = batch
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        L = cfg.n_layers
+        if kv_dtype == "int8":
+            return {"k": arr((L, B, max_len, Hkv, hd), jnp.int8),
+                    "v": arr((L, B, max_len, Hkv, hd), jnp.int8),
+                    "k_scale": arr((L, B, max_len, Hkv), jnp.float32),
+                    "v_scale": arr((L, B, max_len, Hkv), jnp.float32)}
+        return {"k": arr((L, B, max_len, Hkv, hd)),
+                "v": arr((L, B, max_len, Hkv, hd))}
+    if fam == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        d_inner = cfg.ssm_expand * cfg.d_model
+        Hm = d_inner // cfg.ssm_headdim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+        ssm = SSM.SSMCache(
+            h=arr((cfg.n_layers, B, Hm, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+            conv=arr((cfg.n_layers, B, cfg.ssm_conv - 1, conv_dim), jnp.float32))
+        return {"ssm": ssm,
+                "k": arr((G, B, max_len, Hkv, hd)),
+                "v": arr((G, B, max_len, Hkv, hd))}
+    if fam == "ssm":
+        n_super = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        d_inner = int(cfg.proj_factor * cfg.d_model)
+        P = d_inner // cfg.n_heads
+        ml = XL.MLSTMCache(
+            C=arr((n_super, n_m, B, cfg.n_heads, P, P), jnp.float32),
+            n=arr((n_super, n_m, B, cfg.n_heads, P), jnp.float32),
+            m=arr((n_super, n_m, B, cfg.n_heads), jnp.float32))
+        sl = XL.SLSTMCache(
+            c=arr((n_super, B, cfg.d_model), jnp.float32),
+            n=arr((n_super, B, cfg.d_model), jnp.float32),
+            m=arr((n_super, B, cfg.d_model), jnp.float32),
+            h=arr((n_super, B, cfg.d_model), jnp.float32))
+        return {"mlstm": ml, "slstm": sl}
+    if fam == "encdec":
+        L = cfg.n_layers
+        return {"k": arr((L, B, max_len, Hkv, hd)),
+                "v": arr((L, B, max_len, Hkv, hd)),
+                "ck": arr((L, B, cfg.cross_len, Hkv, hd)),
+                "cv": arr((L, B, cfg.cross_len, Hkv, hd))}
+    raise ValueError(fam)
+
+
+def prefill(cfg: ArchConfig, params, batch: dict):
+    """Full-sequence forward that fills a cache; returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    if cfg.family == "encdec":
+        enc = _whisper_encode(cfg, params, batch["frames"])
+        ck, cv = _whisper_cross_kv(cfg, params, enc)
+        x = _embed(cfg, params, tokens)
+        pos = _positions_for(cfg, B, tokens.shape[1])
+        cache = make_cache(cfg, B, tokens.shape[1])
+        # fill self cache
+        kv = (cache["k"], cache["v"])
+        x, new_kv, _ = _scan_layers(cfg, params["dec_layers"], x, pos,
+                                    kv_cache=kv, pos=0, causal=True,
+                                    cross_kv=(ck[:, :, :cfg.cross_len],
+                                              cv[:, :, :cfg.cross_len])
+                                    if ck.shape[2] >= cfg.cross_len else (ck, cv))
+        x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+        logits = _logits(cfg, params, x[:, -1:])
+        return logits, {"k": new_kv[0], "v": new_kv[1],
+                        "ck": ck[:, :, :cfg.cross_len], "cv": cv[:, :, :cfg.cross_len]}
+
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(ACT_DTYPE)
+        txt = _embed(cfg, params, tokens)
+        x = jnp.concatenate([vis, txt], axis=1)
+        positions = _vlm_positions(cfg, B, vis.shape[1], tokens.shape[1])
+    else:
+        x = _embed(cfg, params, tokens)
+        positions = _positions_for(cfg, B, tokens.shape[1])
+
+    S = x.shape[1]
+    cache = make_cache(cfg, B, S)
+    h, new_cache, _ = forward_core(cfg, params, x, positions, cache=cache, pos=0)
+    h = rms_norm(h, params["ln_final"], cfg.norm_eps)
+    logits = _logits(cfg, params, h[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """One decode step: tokens (B, 1), cache holds ``pos`` valid entries."""
+    B = tokens.shape[0]
+    x = _embed(cfg, params, tokens)
+    if cfg.mrope_sections:
+        # cache slot ``pos`` holds text token (pos - n_vision); its M-RoPE
+        # position stream continues the collapsed text positions (1-based)
+        p = jnp.broadcast_to(pos - cfg.n_vision_tokens + 1, (B, 1))
+        positions = jnp.stack([p, p, p], axis=-1)
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1))
+
+    if cfg.family == "encdec":
+        kv = (cache["k"], cache["v"])
+        x, new_kv, _ = _scan_layers(cfg, params["dec_layers"], x, positions,
+                                    kv_cache=kv, pos=pos, causal=True,
+                                    cross_kv=(cache["ck"], cache["cv"]))
+        new_cache = dict(cache, k=new_kv[0], v=new_kv[1])
+    else:
+        x, new_cache, _ = forward_core(cfg, params, x, positions,
+                                       cache=cache, pos=pos)
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = _logits(cfg, params, x)
+    return logits, new_cache

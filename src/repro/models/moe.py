@@ -1,0 +1,115 @@
+"""Top-k token-choice MoE with two interchangeable dispatch strategies.
+
+``dense``  — all-experts einsum combined by router weights. O(E/topk) FLOP
+             waste but branch-free; the correctness oracle for smoke tests.
+``sorted`` — production path: argsort tokens by expert, pack into
+             (E, capacity, d) buffers, batched expert matmuls, scatter back.
+             Static shapes throughout; with experts sharded on the ``model``
+             mesh axis GSPMD lowers the pack/unpack into all-to-alls (EP).
+Tokens over capacity are dropped (their MoE output is 0 — residual carries
+them), the standard capacity-factor behaviour.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_moe(key, d_model: int, n_experts: int, expert_dff: int, top_k: int,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "router": dense_init(k1, (d_model, n_experts), dtype=dtype),
+        "w_gate": dense_init(k2, (n_experts, d_model, expert_dff), dtype=dtype),
+        # w_up fused into w_gate's activation (SwiGLU would double params of
+        # tiny granite experts); experts are plain SiLU MLPs
+        "w_down": dense_init(k3, (n_experts, expert_dff, d_model), dtype=dtype),
+    }
+
+
+def _router(params, x2d, top_k: int):
+    logits = x2d.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)        # (T, K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    E = params["router"].shape[1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def moe_dense(params, x: jnp.ndarray, top_k: int):
+    """Oracle: compute every expert for every token, combine by routing."""
+    B, S, D = x.shape
+    x2 = x.reshape(-1, D)
+    weights, experts, aux = _router(params, x2, top_k)
+    dt = x.dtype
+    h = jnp.einsum("td,edf->tef", x2, params["w_gate"].astype(dt))
+    h = jax.nn.silu(h)
+    y_all = jnp.einsum("tef,efd->ted", h, params["w_down"].astype(dt))  # (T,E,D)
+    E = params["router"].shape[1]
+    comb = jnp.zeros((x2.shape[0], E), dtype=jnp.float32)
+    t_idx = jnp.arange(x2.shape[0])[:, None]
+    comb = comb.at[t_idx, experts].add(weights)
+    y = jnp.einsum("te,ted->td", comb.astype(dt), y_all)
+    return y.reshape(B, S, D), aux
+
+
+def moe_sorted(params, x: jnp.ndarray, top_k: int, capacity_factor: float = 1.25):
+    """Production path: sort-and-pack dispatch with per-expert capacity."""
+    B, S, D = x.shape
+    T = B * S
+    E = params["router"].shape[1]
+    x2 = x.reshape(T, D)
+    weights, experts, aux = _router(params, x2, top_k)
+
+    flat_expert = experts.reshape(-1)                     # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), top_k)
+    flat_weight = weights.reshape(-1)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    e_sorted = flat_expert[order]
+    t_sorted = flat_token[order]
+    w_sorted = flat_weight[order]
+
+    # position of each routed pair within its expert group
+    pos_total = jnp.arange(e_sorted.shape[0], dtype=jnp.int32)
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E))
+    pos_in_expert = pos_total - seg_start[e_sorted]
+
+    # capacity floor: tiny token counts (decode steps) would otherwise drop
+    # colliding tokens — floor at min(T, 128) so decode is drop-free while
+    # large-batch training keeps the usual capacity-factor behaviour
+    cap = int(max(round(capacity_factor * top_k * T / E), min(T, 128), 1))
+    keep = pos_in_expert < cap
+
+    from repro.distributed.sharding import shard_act
+
+    dt = x.dtype
+    gathered = shard_act(jnp.where(keep[:, None], x2[t_sorted], 0.0).astype(dt),
+                         "td")
+    buf = jnp.zeros((E, cap, D), dtype=dt)
+    buf = buf.at[e_sorted, jnp.clip(pos_in_expert, 0, cap - 1)].add(gathered)
+    buf = shard_act(buf, "moe_ecd")   # capacity over data-parallel axes
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dt)))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+    y_buf = shard_act(y_buf, "moe_ecd")
+
+    y_pairs = y_buf[e_sorted, jnp.clip(pos_in_expert, 0, cap - 1)]
+    y_pairs = jnp.where(keep[:, None], y_pairs, 0.0)
+    y_pairs = shard_act(y_pairs, "td")
+    y = jnp.zeros((T, D), dtype=dt).at[t_sorted].add(
+        y_pairs * w_sorted[:, None].astype(dt))
+    y = shard_act(y, "td")
+    return y.reshape(B, S, D), aux
+
+
+def moe(params, x: jnp.ndarray, top_k: int, impl: str = "sorted"):
+    if impl == "dense":
+        return moe_dense(params, x, top_k)
+    return moe_sorted(params, x, top_k)

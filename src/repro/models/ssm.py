@@ -1,0 +1,152 @@
+"""Mamba-2 (SSD) block: chunked parallel scan for training/prefill and a
+one-step recurrence for decode (arXiv:2405.21060, 'minimal SSD' form).
+
+State: h (B, H, P, N) per head; x is chunked along time, within-chunk terms
+use the quadratic (attention-like) form with the segment-sum decay matrix,
+across-chunk state is carried by a lax.scan — O(S·Q) work, O(Q²) memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray        # (B, H, P, N)
+    conv: jnp.ndarray     # (B, K-1, conv_dim)
+
+
+def init_mamba2(key, d_model: int, d_state: int, expand: int, headdim: int,
+                d_conv: int, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 6)
+    conv_dim = d_inner + 2 * d_state
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads),
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _split_proj(cfg_dims, zxbcdt):
+    d_inner, d_state, n_heads = cfg_dims
+    z, xBC, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, k = conv_w.shape[0]. conv_state: (B, k-1, C)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(full[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
+              for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out + conv_b[None, None]), new_state
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) lower-tri segment sums: out[i,j] = sum a[j+1..i]."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def mamba2_forward(params, x: jnp.ndarray, d_state: int, expand: int,
+                   headdim: int, cache: SSMCache | None = None,
+                   chunk: int = 128):
+    """x: (B, S, D). Returns (y, new_cache)."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    n_heads = d_inner // headdim
+    dt_f = x.dtype
+
+    zxbcdt = x @ params["in_proj"].astype(dt_f)
+    z, xBC, dt = _split_proj((d_inner, d_state, n_heads), zxbcdt)
+    conv_state = cache.conv if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"].astype(dt_f),
+                                 params["conv_b"].astype(dt_f), conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + d_state], axis=-1)
+    xs = xs.reshape(B, S, n_heads, headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (H,)
+
+    h0 = (cache.h.astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, n_heads, headdim, d_state), jnp.float32))
+
+    if S == 1:  # decode recurrence
+        dA = jnp.exp(dt[:, 0] * A[None, :])                     # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        h = h0 * dA[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, d_inner).astype(dt_f)
+    else:
+        Q = min(chunk, S)
+        pad = (-S) % Q
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            Bm_p, Cm_p, dt_p = Bm, Cm, dt
+        nC = (S + pad) // Q
+        xs_c = xs.reshape(B, nC, Q, n_heads, headdim)
+        B_c = Bm_p.reshape(B, nC, Q, d_state).astype(jnp.float32)
+        C_c = Cm_p.reshape(B, nC, Q, d_state).astype(jnp.float32)
+        dt_c = dt_p.reshape(B, nC, Q, n_heads)
+
+        def chunk_body(h, inp):
+            xc, bc, cc, dtc = inp  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+            a = dtc * A[None, None, :]                 # (B,Q,H)
+            a_hq = jnp.moveaxis(a, -1, 1)              # (B,H,Q)
+            L = jnp.exp(_segsum(a_hq))                 # (B,H,Q,Q)
+            xdt = xc.astype(jnp.float32) * dtc[..., None]   # (B,Q,H,P)
+            # within-chunk (quadratic form)
+            scores = jnp.einsum("bqn,bkn->bqk", cc, bc)     # (B,Q,Q)
+            y_diag = jnp.einsum("bhqk,bqk,bkhp->bqhp",
+                                L, scores, xdt)
+            # contribution of incoming state
+            cum = jnp.cumsum(a_hq, axis=-1)            # (B,H,Q)
+            decay_in = jnp.exp(cum)                    # (B,H,Q)
+            y_off = jnp.einsum("bqn,bhpn,bhq->bqhp", cc, h, decay_in)
+            # new state: decayed old + within-chunk accumulation
+            decay_out = jnp.exp(cum[..., -1:] - cum)   # (B,H,Q)
+            h_new = h * jnp.exp(cum[..., -1])[:, :, None, None] + jnp.einsum(
+                "bkn,bhk,bkhp->bhpn", bc, decay_out, xdt)
+            y = y_diag + y_off
+            y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xc.astype(jnp.float32)
+            return h_new, y
+
+        h, ys = jax.lax.scan(chunk_body, h0,
+                             (jnp.moveaxis(xs_c, 1, 0), jnp.moveaxis(B_c, 1, 0),
+                              jnp.moveaxis(C_c, 1, 0), jnp.moveaxis(dt_c, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, nC * Q, d_inner)[:, :S]
+        y = y.astype(dt_f)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_scale"])
+    out = y @ params["out_proj"].astype(dt_f)
+    new_cache = SSMCache(h=h.astype(jnp.float32), conv=new_conv.astype(jnp.float32))
+    return out, new_cache

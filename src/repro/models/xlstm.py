@@ -1,0 +1,203 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gating, sequential by construction).
+
+mLSTM trains via a chunked stabilized form (exp-gated linear attention with
+running (C, n, m) chunk state); sLSTM scans over time (its recurrent gate
+inputs R·h_{t-1} admit no parallel form — the paper says as much). Both have
+O(1)-state decode steps, which is why xlstm-350m runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray   # (B, H, P, P)
+    n: jnp.ndarray   # (B, H, P)
+    m: jnp.ndarray   # (B, H)
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray   # (B, D)
+    n: jnp.ndarray   # (B, D)
+    m: jnp.ndarray   # (B, D)
+    h: jnp.ndarray   # (B, D)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, proj_factor: float = 2.0,
+               dtype=jnp.float32):
+    d_inner = int(proj_factor * d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "q": dense_init(ks[1], (d_inner, d_inner), dtype=dtype),
+        "k": dense_init(ks[2], (d_inner, d_inner), dtype=dtype),
+        "v": dense_init(ks[3], (d_inner, d_inner), dtype=dtype),
+        "i_gate": dense_init(ks[4], (d_inner, n_heads), dtype=dtype),
+        "f_gate": dense_init(ks[5], (d_inner, n_heads), dtype=dtype),
+        "f_bias": jnp.full((n_heads,), 3.0, dtype),  # open forget gates at init
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "down_proj": dense_init(ks[6], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def mlstm_forward(params, x: jnp.ndarray, n_heads: int,
+                  cache: MLSTMCache | None = None, chunk: int = 64):
+    """x: (B, S, D) -> (y, new_cache). Stabilized exp-gating (log-space m)."""
+    B, S, D = x.shape
+    dt_f = x.dtype
+    up = x @ params["up_proj"].astype(dt_f)
+    inner, z = jnp.split(up, 2, axis=-1)
+    d_inner = inner.shape[-1]
+    P = d_inner // n_heads
+
+    def heads(t):
+        return t.reshape(B, S, n_heads, P)
+
+    q = heads(inner @ params["q"].astype(dt_f)).astype(jnp.float32) * (P ** -0.5)
+    k = heads(inner @ params["k"].astype(dt_f)).astype(jnp.float32)
+    v = heads(inner @ params["v"].astype(dt_f)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (inner @ params["f_gate"].astype(dt_f)).astype(jnp.float32)
+        + params["f_bias"].astype(jnp.float32))     # (B,S,H)
+    logi = (inner @ params["i_gate"].astype(dt_f)).astype(jnp.float32)
+
+    C0 = (cache.C if cache is not None
+          else jnp.zeros((B, n_heads, P, P), jnp.float32))
+    n0 = cache.n if cache is not None else jnp.zeros((B, n_heads, P), jnp.float32)
+    m0 = cache.m if cache is not None else jnp.full((B, n_heads), -30.0, jnp.float32)
+
+    if S == 1:
+        m_new = jnp.maximum(logf[:, 0] + m0, logi[:, 0])
+        fw = jnp.exp(logf[:, 0] + m0 - m_new)
+        iw = jnp.exp(logi[:, 0] - m_new)
+        C = C0 * fw[..., None, None] + jnp.einsum("bhp,bhq->bhpq", v[:, 0],
+                                                  k[:, 0] * iw[..., None])
+        n = n0 * fw[..., None] + k[:, 0] * iw[..., None]
+        num = jnp.einsum("bhpq,bhq->bhp", C, q[:, 0])
+        den = jnp.abs(jnp.einsum("bhq,bhq->bh", n, q[:, 0]))
+        y = (num / jnp.maximum(den, 1.0)[..., None]).reshape(B, 1, d_inner)
+        Cn, nn, mn = C, n, m_new
+    else:
+        Q = min(chunk, S)
+        pad = (-S) % Q
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+            logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        nC = (S + pad) // Q
+
+        def to_chunks(t, extra):
+            return jnp.moveaxis(t.reshape((B, nC, Q) + extra), 1, 0)
+
+        qs = to_chunks(q, (n_heads, P))
+        ks = to_chunks(k, (n_heads, P))
+        vs = to_chunks(v, (n_heads, P))
+        fs = to_chunks(logf, (n_heads,))
+        is_ = to_chunks(logi, (n_heads,))
+
+        def body(carry, inp):
+            C, n, m = carry
+            qc, kc, vc, fc, ic = inp      # (B,Q,H,*)
+            fH = jnp.moveaxis(fc, -1, 1)  # (B,H,Q)
+            iH = jnp.moveaxis(ic, -1, 1)
+            cumf = jnp.cumsum(fH, axis=-1)            # (B,H,Q)
+            # log decay from step j (exclusive) to i: cumf_i - cumf_j
+            lD = cumf[..., :, None] - cumf[..., None, :] + iH[..., None, :]
+            tri = jnp.tril(jnp.ones((Q, Q), bool))
+            lD = jnp.where(tri, lD, -jnp.inf)          # (B,H,Q,Q)
+            l_in = cumf + m[..., None]                 # carry contribution
+            m_row = jnp.maximum(jnp.max(lD, axis=-1), l_in)  # (B,H,Q)
+            Dmat = jnp.exp(lD - m_row[..., None])
+            carry_w = jnp.exp(l_in - m_row)            # (B,H,Q)
+            qH = jnp.moveaxis(qc, 2, 1)                # (B,H,Q,P)
+            kH = jnp.moveaxis(kc, 2, 1)
+            vH = jnp.moveaxis(vc, 2, 1)
+            scores = jnp.einsum("bhqp,bhkp->bhqk", qH, kH) * Dmat
+            # carry: y += (C @ q) — q contracts C's k-dim (second axis)
+            num = jnp.einsum("bhqk,bhkp->bhqp", scores, vH) + \
+                jnp.einsum("bhqr,bhpr,bhq->bhqp", qH, C, carry_w)
+            den_raw = jnp.sum(scores, axis=-1) + \
+                jnp.einsum("bhqp,bhp,bhq->bhq", qH, n, carry_w)
+            y = num / jnp.maximum(jnp.abs(den_raw), 1.0)[..., None]
+            # chunk-end state
+            m_end = jnp.maximum(cumf[..., -1] + m,
+                                jnp.max(cumf[..., -1:] - cumf + iH, axis=-1))
+            wC = jnp.exp(cumf[..., -1] + m - m_end)     # (B,H)
+            wk = jnp.exp(cumf[..., -1:] - cumf + iH - m_end[..., None])  # (B,H,Q)
+            C_new = C * wC[..., None, None] + jnp.einsum(
+                "bhkp,bhk,bhkr->bhpr", vH, wk, kH)
+            n_new = n * wC[..., None] + jnp.einsum("bhk,bhkp->bhp", wk, kH)
+            return (C_new, n_new, m_end), jnp.moveaxis(y, 1, 2)  # (B,Q,H,P)
+
+        (Cn, nn, mn), ys = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, fs, is_))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, nC * Q, d_inner)[:, :S]
+
+    y = rms_norm(y.astype(dt_f), params["norm_scale"])
+    y = y * jax.nn.silu(z)
+    out = y @ params["down_proj"].astype(dt_f)
+    return out, MLSTMCache(C=Cn, n=nn, m=mn)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), dtype=dtype),
+        "r_rec": dense_init(ks[1], (d_model, 4 * d_model), dtype=dtype) * 0.1,
+        "bias": jnp.zeros((4 * d_model,), dtype),
+        "norm_scale": jnp.zeros((d_model,), dtype),
+        "out_proj": dense_init(ks[2], (d_model, d_model), dtype=dtype),
+    }
+
+
+def slstm_forward(params, x: jnp.ndarray, cache: SLSTMCache | None = None):
+    """x: (B, S, D). Sequential scan (recurrent gates)."""
+    B, S, D = x.shape
+    dt_f = x.dtype
+    pre = (x @ params["w_in"].astype(dt_f)).astype(jnp.float32) + \
+        params["bias"].astype(jnp.float32)
+
+    c0 = cache.c if cache is not None else jnp.zeros((B, D), jnp.float32)
+    n0 = cache.n if cache is not None else jnp.ones((B, D), jnp.float32)
+    m0 = cache.m if cache is not None else jnp.zeros((B, D), jnp.float32)
+    h0 = cache.h if cache is not None else jnp.zeros((B, D), jnp.float32)
+    R = params["r_rec"].astype(jnp.float32)
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        g = pre_t + h @ R
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        logf = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(logf + m, ii)
+        fw = jnp.exp(logf + m - m_new)
+        iw = jnp.exp(ii - m_new)
+        c_new = fw * c + iw * zt
+        n_new = fw * n + iw
+        h_new = ot * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), ys = jax.lax.scan(step, (c0, n0, m0, h0),
+                                    jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).astype(dt_f)
+    y = rms_norm(y, params["norm_scale"])
+    out = y @ params["out_proj"].astype(dt_f)
+    return out, SLSTMCache(c=c, n=n, m=m, h=h)

@@ -1,0 +1,84 @@
+"""Distributed vector-search serving (DESIGN.md §3, §5).
+
+The database rows are sharded across the data-parallel axis; every device
+scans its shard with the fused distance+top-k path (the Pallas kernels on
+TPU; their jnp oracle elsewhere) and only the per-shard top-k (k values +
+global ids) crosses the network — a tournament merge, never raw rows.
+
+``search_step`` is jit/lower-able with ShapeDtypeStructs, so the same
+multi-pod dry-run methodology applies to the serving plane (reported as an
+extra, beyond-the-40-cells row in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _local_scan(db_shard, qvecs, k, shard_offset):
+    scores = qvecs @ db_shard.T                       # (Q, N_local)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx + shard_offset
+
+
+def make_search_step(mesh: Mesh, k: int, axis: str = "data"):
+    """Returns search_step(db_shard_view, qvecs) -> (vals (Q,k), ids (Q,k)).
+
+    db is laid out (N, d) sharded on axis 0 over ``axis``; queries are
+    replicated. The merge all-gathers only (Q, k) candidates per shard.
+    """
+    n_shards = mesh.shape[axis]
+
+    def step(db, qvecs):
+        def shard_fn(db_local, q_local):
+            rank = jax.lax.axis_index(axis)
+            n_local = db_local.shape[0]
+            vals, ids = _local_scan(db_local, q_local, min(k, db_local.shape[0]),
+                                    rank * n_local)
+            # tournament merge: gather candidates only
+            all_vals = jax.lax.all_gather(vals, axis)   # (S, Q, k)
+            all_ids = jax.lax.all_gather(ids, axis)
+            S, Q, kk = all_vals.shape
+            flat_v = jnp.moveaxis(all_vals, 0, 1).reshape(Q, S * kk)
+            flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(Q, S * kk)
+            best_v, pos = jax.lax.top_k(flat_v, k)
+            best_i = jnp.take_along_axis(flat_i, pos, axis=1)
+            return best_v, best_i
+
+        spec_db = P(axis, None)
+        spec_q = P()
+        # outputs are bitwise-identical on every shard after the gather +
+        # top_k, but replication-rule inference can't see that — disable the check
+        return shard_map(shard_fn, mesh=mesh,
+                         in_specs=(spec_db, spec_q),
+                         out_specs=(P(), P()), check_rep=False)(db, qvecs)
+
+    return step
+
+
+def distributed_rerank(mesh: Mesh, db, cand_ids, qvec, k: int,
+                       axis: str = "data"):
+    """Full-score rerank of candidate ids against a sharded database:
+    each shard scores the candidates it owns; a masked all-reduce merges."""
+    n_shards = mesh.shape[axis]
+
+    def shard_fn(db_local, ids, q):
+        rank = jax.lax.axis_index(axis)
+        n_local = db_local.shape[0]
+        local = ids - rank * n_local
+        mine = (local >= 0) & (local < n_local)
+        rows = db_local[jnp.clip(local, 0, n_local - 1)]
+        scores = rows @ q
+        scores = jnp.where(mine, scores, 0.0)
+        scores = jax.lax.psum(scores, axis)  # exactly one shard owns each id
+        return scores
+
+    scores = shard_map(shard_fn, mesh=mesh,
+                       in_specs=(P(axis, None), P(), P()),
+                       out_specs=P(), check_rep=False)(db, cand_ids, qvec)
+    vals, pos = jax.lax.top_k(scores, k)
+    return vals, cand_ids[pos]

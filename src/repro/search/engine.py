@@ -1,0 +1,41 @@
+"""Query-plan execution engine bridging MINT plans to the TPU-native path.
+
+A MINT plan (X, EK) executes as: per-index scan (IVF-Flat / flat via the
+fused distance+top-k kernels) → candidate union → full-score rerank. The
+CPU-reference path (graph indexes, numpy) lives in ``core.tuner.execute_plan``;
+this engine is the batched, jit-friendly serving form used by the serving
+example and the distributed dry-run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.types import Query, QueryPlan
+from repro.data.vectors import MultiVectorDatabase
+from repro.kernels.distance.ops import fused_scan
+
+
+def execute_plan_fused(db: MultiVectorDatabase, query: Query, plan: QueryPlan,
+                       interpret: bool | None = None):
+    """Run a plan with the fused kernels (flat scans at each index's ek)."""
+    cands = []
+    cost = 0.0
+    for spec, ek in zip(plan.indexes, plan.eks):
+        data = db.concat(spec.vid)
+        q = query.concat(spec.vid)[None, :]
+        _, ids = fused_scan(jnp.asarray(q), jnp.asarray(data),
+                            k=min(ek, data.shape[0]), interpret=interpret)
+        cands.append(np.asarray(ids)[0])
+        cost += data.shape[1] * data.shape[0]  # numDist = N for a flat scan
+    if not cands:
+        data = db.concat(query.vid)
+        q = query.concat()[None, :]
+        _, ids = fused_scan(jnp.asarray(q), jnp.asarray(data), k=query.k,
+                            interpret=interpret)
+        return np.asarray(ids)[0], query.dim() * db.n_rows
+    union = np.unique(np.concatenate(cands))
+    scores = db.concat(query.vid)[union] @ query.concat()
+    cost += query.dim() * sum(plan.eks)
+    top = np.argsort(-scores, kind="stable")[: query.k]
+    return union[top], cost

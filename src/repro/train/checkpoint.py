@@ -1,0 +1,116 @@
+"""Checkpointing: atomic (write-tmp → rename), keep-last-k, async writer.
+
+Layout: <dir>/step_<n>/ with one .npy per flattened pytree leaf plus a
+manifest (treedef + shapes + dtypes). Restores validate shapes against the
+current pytree, so a resumed run catches config drift immediately.
+``repro.distributed.elastic`` reshards these checkpoints across mesh sizes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = re.sub(r"[^A-Za-z0-9_.-]", "_",
+                      "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in path)) or "leaf"
+        out.append((name, leaf))
+    return out
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """bf16 (ml_dtypes) isn't npy-native: store as f32 (lossless) + tag."""
+    if str(arr.dtype) == "bfloat16":
+        return arr.astype(np.float32), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+                    async_write: bool = False) -> str:
+    """Atomic checkpoint save. Returns the final directory path."""
+    leaves = [(n, np.asarray(l)) for n, l in _leaf_paths(tree)]
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(leaves):
+            fname = f"{i:04d}_{name[:120]}.npy"
+            savable, dtype_tag = _to_savable(arr)
+            np.save(os.path.join(tmp, fname), savable)
+            manifest["leaves"].append(
+                {"file": fname, "name": name, "shape": list(arr.shape),
+                 "dtype": dtype_tag})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+        return final
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return os.path.join(ckpt_dir, f"step_{step:08d}")
+    return _write()
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(list_checkpoints(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def list_checkpoints(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_arrays(ckpt_dir: str, step: int) -> tuple[list[np.ndarray], dict]:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = [np.load(os.path.join(d, leaf["file"]))
+              for leaf in manifest["leaves"]]
+    return arrays, manifest
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, tree_like):
+    """Restore into the structure of ``tree_like`` (shape-checked)."""
+    arrays, manifest = load_arrays(ckpt_dir, step)
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    if len(arrays) != len(leaves):
+        raise ValueError(f"checkpoint has {len(arrays)} leaves, "
+                         f"expected {len(leaves)}")
+    for arr, leaf, meta in zip(arrays, leaves, manifest["leaves"]):
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {meta['name']}: "
+                f"{arr.shape} vs {tuple(leaf.shape)} — use elastic.reshard")
+    return jax.tree_util.tree_unflatten(
+        treedef, [jax.numpy.asarray(a, dtype=l.dtype)
+                  for a, l in zip(arrays, leaves)])

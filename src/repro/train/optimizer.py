@@ -1,0 +1,80 @@
+"""AdamW (hand-rolled, pytree-native) with global-norm clipping and an
+optional ZeRO-1 sharding helper for the optimizer moments."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, max_grad_norm=1.0):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def cosine_schedule(step, *, peak_lr=3e-4, warmup=100, total=10000, floor=0.1):
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def zero1_shardings(param_shardings, params, mesh: Mesh):
+    """Shard optimizer moments additionally over the data axis (ZeRO-1):
+    pick the first un-sharded axis divisible by the data-parallel size."""
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+    def widen(sh: NamedSharding, leaf):
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        used = set()
+        for entry in spec:
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                used.add(a)
+        if used & {"data", "pod"}:
+            return sh  # already data-sharded (FSDP mode)
+        for ax in range(leaf.ndim):
+            if spec[ax] is None and leaf.shape[ax] % max(data, 1) == 0 \
+                    and leaf.shape[ax] >= data > 1:
+                axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+                spec[ax] = tuple(axes) if len(axes) > 1 else axes[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(widen, param_shardings, params)

@@ -1,0 +1,85 @@
+"""jit-able train / serve steps with distribution knobs.
+
+Knobs (all visible in the roofline collective term):
+  - ``bf16_grads``: cast params to bf16 before the grad computation so the
+    data-parallel gradient all-reduce moves half the bytes (error is absorbed
+    by the f32 master params + Adam moments).
+  - ``microbatch``: gradient accumulation via lax.scan (memory ↓).
+  - remat comes from ``ArchConfig.remat`` (per-block checkpointing).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.train.optimizer import AdamWState, adamw_update, cosine_schedule
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def make_train_step(cfg: ArchConfig, *, bf16_grads: bool = True,
+                    microbatch: int = 1, peak_lr: float = 3e-4,
+                    total_steps: int = 10000):
+    def loss_fn(p, batch):
+        return M.train_loss(cfg, p, batch)
+
+    def grads_of(params, batch):
+        if bf16_grads:
+            p_c = cast_tree(params, jnp.bfloat16)
+            loss, grads = jax.value_and_grad(loss_fn)(p_c, batch)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        if microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mb_batch):
+                loss_a, g_a = carry
+                loss, grads = grads_of(params, mb_batch)
+                g_a = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   g_a, grads)
+                return (loss_a + loss, g_a), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (0.0, g0), mb)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        lr = cosine_schedule(opt_state.step.astype(jnp.float32),
+                             peak_lr=peak_lr, total=total_steps)
+        new_params, new_state, gnorm = adamw_update(params, grads, opt_state, lr)
+        metrics = {"loss": loss.astype(jnp.float32), "gnorm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step (the ``decode_*`` / ``long_*`` dry-run target)."""
+    def serve_step(params, cache, tokens, pos):
+        p_c = cast_tree(params, jnp.bfloat16)
+        return M.decode_step(cfg, p_c, cache, tokens, pos)
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        p_c = cast_tree(params, jnp.bfloat16)
+        return M.prefill(cfg, p_c, batch)
+    return prefill_step

@@ -1,0 +1,12 @@
+"""Test-session hygiene: the main pytest process must see exactly ONE
+device (smoke tests assume it); multi-device tests spawn subprocesses with
+their own XLA_FLAGS (tests/test_distributed.py)."""
+import jax
+
+
+def pytest_sessionstart(session):
+    n = len(jax.devices())
+    assert n == 1, (
+        f"pytest must run with a single device (saw {n}); do not set "
+        "--xla_force_host_platform_device_count globally — only "
+        "repro.launch.dryrun does that, in its own process.")

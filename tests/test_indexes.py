@@ -1,0 +1,110 @@
+"""Index substrate tests: exactness, recall curves, numDist accounting."""
+import numpy as np
+import pytest
+
+from repro.data.vectors import make_database, make_queries
+from repro.index.base import exact_topk
+from repro.index.bruteforce import FlatIndex, batch_exact_topk
+from repro.index.graph import (HNSWIndex, VamanaIndex, add_reverse_edges,
+                               build_knn_graph)
+from repro.index.ivf import IVFFlatIndex
+from repro.index.registry import IndexStore
+from repro.core.types import IndexSpec
+
+N = 2500
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(N, [("x", 40), ("y", 64)], seed=1)
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    return make_queries(db, [(0,)] * 4, k=20, seed=2)
+
+
+def test_batch_exact_topk_matches_numpy(db):
+    data = db.columns[0]
+    q = db.columns[0][:3]
+    ids, scores = batch_exact_topk(data, q, 10)
+    ref = np.argsort(-(q @ data.T), axis=1)[:, :10]
+    # compare score sets (ties can permute ids)
+    ref_scores = np.take_along_axis(q @ data.T, ref, axis=1)
+    np.testing.assert_allclose(scores, ref_scores, rtol=1e-5)
+
+
+def test_flat_index_is_exact(db, queries):
+    idx = FlatIndex(db.columns[0])
+    q = queries[0].vectors[0]
+    res = idx.search(q, 15)
+    ref, _ = exact_topk(db.columns[0], q, 15)
+    assert set(res.ids.tolist()) == set(ref.tolist())
+    assert res.num_dist == N
+
+
+def test_knn_graph_excludes_self(db):
+    g = build_knn_graph(db.columns[0][:500], 8)
+    for i in range(500):
+        assert i not in g[i].tolist()
+
+
+def test_add_reverse_edges_sources_valid():
+    adj = np.asarray([[1, 2], [0, 2], [3, 0], [1, 0]], dtype=np.int32)
+    out = add_reverse_edges(adj, cap=2)
+    n, width = out.shape
+    assert width == 4
+    for v in range(n):
+        for u in out[v, 2:]:
+            if u >= 0:
+                assert v in adj[u].tolist()  # reverse of an original edge
+
+
+@pytest.mark.parametrize("cls", [HNSWIndex, VamanaIndex])
+def test_graph_index_recall_improves_with_ek(db, queries, cls):
+    idx = cls(db.columns[0], seed=0)
+    q = queries[0].vectors[0]
+    gt, _ = exact_topk(db.columns[0], q, 20)
+    gt = set(gt.tolist())
+    recalls = []
+    for ek in (20, 200, 1000):
+        res = idx.search(q, ek)
+        recalls.append(len(gt & set(res.ids.tolist())) / 20)
+        assert res.num_dist > 0
+        assert len(res.ids) <= ek
+    assert recalls[-1] >= recalls[0]
+    assert recalls[-1] >= 0.8
+
+
+@pytest.mark.parametrize("cls", [HNSWIndex, VamanaIndex])
+def test_graph_numdist_monotone(db, queries, cls):
+    idx = cls(db.columns[0], seed=0)
+    q = queries[0].vectors[0]
+    nds = [idx.search(q, ek).num_dist for ek in (20, 400, 1500)]
+    assert nds[0] <= nds[1] <= nds[2]
+    assert nds[2] <= N + idx.seed_centroids.shape[0] + 8
+
+
+def test_ivf_full_probe_is_exact(db, queries):
+    idx = IVFFlatIndex(db.columns[0], n_lists=16, seed=0)
+    q = queries[0].vectors[0]
+    res = idx.search(q, 20, nprobe=16)
+    ref, _ = exact_topk(db.columns[0], q, 20)
+    assert set(res.ids.tolist()) == set(ref.tolist())
+    assert res.num_dist == 16 + N  # centroids + all rows
+
+
+def test_index_store_caches_and_concat(db):
+    store = IndexStore(db, seed=0)
+    spec = IndexSpec(vid=(0, 1), kind="hnsw")
+    a = store.get(spec)
+    b = store.get(spec)
+    assert a is b
+    assert a.dim == 104  # 40 + 64
+
+
+def test_multicolumn_scores_are_sums(db):
+    q = make_queries(db, [(0, 1)], k=10, seed=3)[0]
+    concat_scores = db.concat((0, 1)) @ q.concat()
+    split = db.columns[0] @ q.vectors[0] + db.columns[1] @ q.vectors[1]
+    np.testing.assert_allclose(concat_scores, split, rtol=1e-4, atol=1e-5)

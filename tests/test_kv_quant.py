@@ -1,0 +1,68 @@
+"""int8 KV-cache: decode parity vs the bf16 cache (quantized beyond-paper
+memory-term optimization, EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import model as M
+
+
+def test_int8_kv_decode_parity():
+    cfg = get_arch("yi-9b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+
+    # bf16 reference path
+    _, cache16 = jax.jit(lambda p, b: M.prefill(cfg, p, b))(
+        params, {"tokens": tokens[:, :S]})
+    big16 = M.make_cache(cfg, B, S + 1)
+    big16 = jax.tree.map(
+        lambda a, b: b.at[tuple(slice(0, s) for s in a.shape)].set(a),
+        cache16, big16)
+    logit16, _ = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t, S))(
+        params, big16, tokens[:, S:S + 1])
+
+    # int8 path: quantize the prefilled cache into an int8 cache
+    big8 = M.make_cache(cfg, B, S + 1, kv_dtype="int8")
+    kq, ks = M._quantize_kv(cache16["k"])
+    vq, vs = M._quantize_kv(cache16["v"])
+    big8["k"] = big8["k"].at[:, :, :S].set(kq)
+    big8["v"] = big8["v"].at[:, :, :S].set(vq)
+    big8["k_scale"] = big8["k_scale"].at[:, :, :S].set(ks)
+    big8["v_scale"] = big8["v_scale"].at[:, :, :S].set(vs)
+    logit8, new_cache = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t, S))(
+        params, big8, tokens[:, S:S + 1])
+
+    assert new_cache["k"].dtype == jnp.int8
+    a = np.asarray(logit16, np.float32)
+    b = np.asarray(logit8, np.float32)
+    # int8 KV introduces bounded noise; logits track closely
+    assert np.median(np.abs(a - b)) < 0.15
+    # top-1 token agreement for most positions
+    agree = (a.argmax(-1) == b.argmax(-1)).mean()
+    assert agree >= 0.5
+
+    # memory accounting: int8 cache ≈ (1/2 + 1/hd) of the bf16 cache bytes
+    b16 = sum(np.asarray(x).nbytes for x in jax.tree.leaves(big16))
+    b8 = sum(np.asarray(x).nbytes for x in jax.tree.leaves(big8))
+    assert b8 < 0.66 * b16
+
+
+def test_quantize_roundtrip_bound():
+    """Property: dequantization error ≤ scale/2 per element (hypothesis sweep)."""
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(0.01, 100.0))
+    def check(seed, magnitude):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal((2, 3, 4, 8)) * magnitude).astype(np.float32)
+        q, s = M._quantize_kv(jnp.asarray(x))
+        deq = np.asarray(q, np.float32) * np.asarray(s)[..., None]
+        bound = np.asarray(s)[..., None] * 0.5 + 1e-6
+        assert (np.abs(deq - x) <= bound + 1e-4 * np.abs(x)).all()
+
+    check()

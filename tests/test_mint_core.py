@@ -1,0 +1,182 @@
+"""Unit + integration tests for the MINT core (planner, searcher, estimators)."""
+import numpy as np
+import pytest
+
+from repro.core.estimators import (EstimatorBundle, LinearFit, LogFit,
+                                   StorageEstimator, fit_linear, fit_log,
+                                   train_estimators)
+from repro.core.planner import QueryPlanner, WhatIfContext, algorithm1_search, algorithm2_dp
+from repro.core.searcher import BeamSearchParams, ConfigurationSearcher
+from repro.core.tuner import Mint, execute_workload, ground_truth_cache
+from repro.core.types import Constraints, IndexSpec, Query, Workload, norm_vid
+from repro.data.vectors import make_database, make_queries, make_workload
+from repro.index.registry import IndexStore
+
+N_ROWS = 3000
+K = 20
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(N_ROWS, [("a", 32), ("b", 48), ("c", 24)], seed=0)
+
+
+@pytest.fixture(scope="module")
+def mint(db):
+    m = Mint(db, index_kind="hnsw", seed=0, min_sample_rows=800)
+    m.train()
+    return m
+
+
+@pytest.fixture(scope="module")
+def workload(db):
+    wl = make_workload(db, "naive", k=K, seed=0)
+    return wl
+
+
+def test_vid_normalization():
+    assert norm_vid([2, 0, 2, 1]) == (0, 1, 2)
+    with pytest.raises(ValueError):
+        norm_vid([])
+
+
+def test_index_spec_covers():
+    x = IndexSpec(vid=(0, 2), kind="hnsw")
+    assert x.covers((0, 1, 2))
+    assert not x.covers((0, 1))
+
+
+def test_fits():
+    x = np.asarray([10, 20, 40, 80], float)
+    lin = fit_linear(x, 3 * x + 5)
+    assert abs(lin.slope - 3) < 1e-6 and abs(lin.intercept - 5) < 1e-6
+    log = fit_log(x, 0.1 * np.log(x) + 0.2)
+    assert abs(log.alpha - 0.1) < 1e-6
+
+
+def test_estimator_monotone(mint):
+    est = mint.estimators
+    spec = IndexSpec(vid=(0,), kind="hnsw")
+    nd = est.num_dist(spec, np.asarray([10.0, 100.0, 1000.0]))
+    assert nd[0] <= nd[1] <= nd[2]
+    assert nd[2] <= est.n_rows  # flat-scan cap
+    # cost scales with index dimension
+    wide = IndexSpec(vid=(0, 1), kind="hnsw")
+    assert est.index_dim(wide) == 80
+    assert est.cost_idx(wide, 100.0) > 0
+
+
+def test_inflate_ek_floor(mint):
+    est = mint.estimators
+    spec = IndexSpec(vid=(0,), kind="hnsw")
+    floor = est.reliable_ek(spec)
+    out = est.inflate_ek(spec, np.asarray([1.0, floor + 50]))
+    assert out[0] >= 1.0
+    assert out[1] >= floor  # never below the requested rank either
+    assert (out <= est.n_rows).all()
+
+
+def test_whatif_ranks_exact(db, mint):
+    q = make_queries(db, [(0, 1)], k=K, seed=3)[0]
+    ctx = WhatIfContext(q, db, mint.estimators)
+    spec = IndexSpec(vid=(0, 1), kind="hnsw")
+    req = ctx.ek_req(spec)
+    assert req.shape == (K,)
+    # exact-vid index: required eks are the (inflated) ranks 1..K —
+    # monotone after sorting, and at least the item index
+    floor = mint.estimators.reliable_ek(spec)
+    assert (np.sort(req) >= np.arange(1, K + 1)).all()
+
+
+def test_algorithm1_feasible_and_minimal(db, mint):
+    q = make_queries(db, [(0, 1)], k=K, seed=4)[0]
+    ctx = WhatIfContext(q, db, mint.estimators)
+    specs = [IndexSpec(vid=(0,), kind="hnsw"), IndexSpec(vid=(1,), kind="hnsw")]
+    plan = algorithm1_search(ctx, specs, theta_recall=0.9)
+    assert plan is not None
+    assert plan.est_recall >= 0.9 - 1e-9
+    # single-index alternatives can't beat it (Alg1 explores them)
+    for s in specs:
+        p1 = algorithm1_search(ctx, [s], theta_recall=0.9)
+        if p1 is not None:
+            assert plan.est_cost <= p1.est_cost + 1e-6
+
+
+def test_algorithm2_dp_close_to_alg1(db, mint):
+    q = make_queries(db, [(0, 1, 2)], k=K, seed=5)[0]
+    ctx = WhatIfContext(q, db, mint.estimators)
+    specs = [IndexSpec(vid=(c,), kind="hnsw") for c in (0, 1, 2)]
+    p1 = algorithm1_search(ctx, specs, theta_recall=0.9)
+    p2 = algorithm2_dp(ctx, specs, theta_recall=0.9, seed=0)
+    assert p1 is not None and p2 is not None
+    assert p2.est_recall >= 0.9 - 1e-9
+    # DP is approximate (sampled gt) but should be within 3x of Alg1
+    assert p2.est_cost <= 3 * p1.est_cost + 1e-6
+
+
+def test_planner_uses_flat_fallback(db, mint):
+    q = make_queries(db, [(2,)], k=K, seed=6)[0]
+    planner = QueryPlanner(estimators=mint.estimators, database=db)
+    plan = planner.plan(q, frozenset())  # no indexes at all
+    assert plan.indexes == []
+    assert plan.est_recall == 1.0
+    assert plan.est_cost == q.dim() * db.n_rows
+
+
+def test_planner_dispatches_dp_for_many_indexes(db, mint):
+    q = make_queries(db, [(0, 1, 2)], k=K, seed=7)[0]
+    planner = QueryPlanner(estimators=mint.estimators, database=db)
+    config = frozenset(
+        [IndexSpec(vid=v, kind="hnsw")
+         for v in [(0,), (1,), (2,), (0, 1), (1, 2), (0, 1, 2)]])
+    plan = planner.plan(q, config)
+    assert plan.est_recall >= planner.theta_plan * 0.9 - 1e-9
+    assert plan.est_cost <= q.dim() * db.n_rows  # no worse than flat scan
+
+
+def test_searcher_respects_storage(db, mint, workload):
+    cons = Constraints(theta_recall=0.85, theta_storage=2)
+    planner = mint.planner(cons)
+    searcher = ConfigurationSearcher(planner, workload, cons,
+                                     BeamSearchParams(beam_width=2, max_iters=4))
+    result = searcher.search()
+    assert len(result.configuration) <= 2
+    assert searcher.what_if_calls > 0
+    # cache effective on repeated evaluations
+    assert searcher.cache_hits > 0
+
+
+def test_mint_beats_or_matches_percolumn_estimate(db, mint, workload):
+    cons = Constraints(theta_recall=0.85, theta_storage=3)
+    res = mint.tune(workload, cons)
+    pc = mint.per_column(workload, cons)
+    assert res.est_workload_cost <= pc.est_workload_cost * 1.05
+    assert res.storage <= cons.theta_storage
+
+
+def test_execute_workload_end_to_end(db, mint, workload):
+    cons = Constraints(theta_recall=0.85, theta_storage=3)
+    res = mint.tune(workload, cons)
+    store = IndexStore(db, seed=0)
+    gt = ground_truth_cache(db, workload)
+    m = execute_workload(db, store, workload, res, gt)
+    assert m.weighted_cost > 0
+    assert m.mean_recall >= 0.6  # small-N executions are noisy; sanity bound
+    assert all(x.cost > 0 for x in m.per_query)
+
+
+def test_storage_estimator_modes():
+    st = StorageEstimator(n_rows=1000, mode="count")
+    cfg = frozenset([IndexSpec(vid=(0,)), IndexSpec(vid=(1,))])
+    assert st.storage(cfg) == 2
+    st_b = StorageEstimator(n_rows=1000, mode="bytes", degree=16, edge_bytes=4)
+    assert st_b.storage(cfg) == 2 * 1000 * 16 * 4
+
+
+def test_plan_drops_unused_indexes():
+    from repro.core.types import QueryPlan
+    plan = QueryPlan(query_qid=0,
+                     indexes=[IndexSpec(vid=(0,)), IndexSpec(vid=(1,))],
+                     eks=[0, 100], est_cost=1.0, est_recall=0.9)
+    assert len(plan.indexes) == 1
+    assert plan.eks == [100]

@@ -1,0 +1,67 @@
+"""Hypothesis property tests for MINT's algorithmic invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimators import LinearFit, LogFit, fit_linear, fit_log
+from repro.core.planner import _coverage, _relevant_eks
+from repro.core.types import IndexSpec, norm_vid
+from repro.index.graph import add_reverse_edges
+
+
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=12))
+def test_norm_vid_sorted_unique(vids):
+    out = norm_vid(vids)
+    assert list(out) == sorted(set(vids))
+
+
+@given(st.lists(st.floats(1, 1e5), min_size=2, max_size=30),
+       st.floats(0.01, 100), st.floats(-1000, 1000))
+def test_linear_fit_recovers_exact_line(xs, a, b):
+    x = np.unique(np.asarray(xs))
+    if x.size < 2:
+        return
+    fit = fit_linear(x, a * x + b)
+    np.testing.assert_allclose(fit(x), np.maximum(a, 1e-6) * x + b, rtol=1e-3, atol=1e-3)
+
+
+@given(st.floats(0.01, 0.5), st.floats(-2, 2))
+def test_log_fit_clips(alpha, beta):
+    f = LogFit(alpha, beta)
+    vals = f(np.asarray([1.0, 10.0, 1e6]))
+    assert (vals >= f.lo - 1e-12).all() and (vals <= f.hi + 1e-12).all()
+
+
+@given(st.integers(1, 8), st.integers(2, 10), st.data())
+def test_coverage_monotone_in_ek(n_idx, k, data):
+    req = np.asarray(
+        [[data.draw(st.integers(1, 50)) for _ in range(k)] for _ in range(n_idx)],
+        dtype=float)
+    eks_small = np.asarray([data.draw(st.integers(0, 25)) for _ in range(n_idx)], float)
+    bump = np.asarray([data.draw(st.integers(0, 25)) for _ in range(n_idx)], float)
+    cov_small = _coverage(req, eks_small).sum()
+    cov_big = _coverage(req, eks_small + bump).sum()
+    assert cov_big >= cov_small  # more retrieval never loses coverage
+
+
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=20))
+def test_relevant_eks_nested_masks(reqs):
+    req = np.asarray(reqs, dtype=float)
+    levels, masks = _relevant_eks(req)
+    assert levels[0] == 0 and masks[0] == 0
+    # masks are nested (monotone coverage) and the last covers everything
+    for a, b in zip(masks[:-1], masks[1:]):
+        assert (int(a) & int(b)) == int(a)
+    assert bin(int(masks[-1])).count("1") == len(req)
+
+
+@settings(max_examples=25)
+@given(st.integers(2, 30), st.integers(1, 6), st.integers(1, 8))
+def test_reverse_edges_are_reverses(n, k, cap):
+    rng = np.random.default_rng(n * 100 + k)
+    adj = rng.integers(0, n, size=(n, min(k, n))).astype(np.int32)
+    out = add_reverse_edges(adj, cap=cap)
+    assert out.shape == (n, adj.shape[1] + cap)
+    for v in range(n):
+        for u in out[v, adj.shape[1]:]:
+            if u >= 0:
+                assert v in adj[u].tolist()

@@ -1,0 +1,73 @@
+"""Input-spec metadata for the full 10×4 grid (cheap, exhaustive checks)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, get_arch, input_specs, list_archs
+from repro.launch.report import analytic_cell, geometry
+
+GRID = [(a, s) for a in list_archs() for s in SHAPES]
+
+
+@pytest.mark.parametrize("arch,shape", GRID)
+def test_input_specs_shapes(arch, shape):
+    cfg = get_arch(arch)
+    if not cfg.supports(shape):
+        assert cfg.skip_reason(shape)
+        return
+    sp = SHAPES[shape]
+    specs = input_specs(cfg, sp)
+    if sp.kind in ("train", "prefill"):
+        toks = specs["tokens"]
+        assert toks.dtype == jnp.int32
+        assert toks.shape[0] == sp.global_batch
+        if cfg.family == "vlm":
+            assert toks.shape[1] + cfg.n_vision_tokens == sp.seq_len
+            assert specs["vision_embeds"].shape == (
+                sp.global_batch, cfg.n_vision_tokens, cfg.d_model)
+        else:
+            assert toks.shape[1] == sp.seq_len
+        if cfg.family == "encdec":
+            assert specs["frames"].shape == (
+                sp.global_batch, sp.seq_len, cfg.d_model)
+    else:
+        assert specs["tokens"].shape == (sp.global_batch, 1)
+        cache = specs["cache"]
+        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+            assert cache["k"].shape[2] == sp.seq_len
+            assert cache["k"].shape[1] == sp.global_batch
+
+
+@pytest.mark.parametrize("arch,shape", GRID)
+def test_int8_cache_specs(arch, shape):
+    cfg = get_arch(arch)
+    sp = SHAPES[shape]
+    if sp.kind != "decode" or not cfg.supports(shape):
+        return
+    specs = input_specs(cfg, sp, kv_dtype="int8")
+    cache = specs["cache"]
+    if cfg.family in ("dense", "moe", "vlm"):
+        assert cache["k"].dtype == jnp.int8
+        assert cache["k_scale"].shape == cache["k"].shape[:-1]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_analytic_roofline_sane(arch):
+    cfg = get_arch(arch)
+    for shape in SHAPES:
+        if not cfg.supports(shape):
+            continue
+        a = analytic_cell(arch, shape, "16x16", n_params=10 ** 9,
+                          n_active=8 * 10 ** 8)
+        assert a["t_compute_s"] >= 0 and a["t_memory_s"] > 0
+        assert 0 < a["roofline_fraction"] <= 1.0 + 1e-9
+        assert a["dominant"] in ("compute", "memory", "collective")
+        assert 0 < a["useful_flops_ratio"] <= 1.0 + 1e-9
+
+
+def test_geometry_counts():
+    assert geometry(get_arch("yi-9b"))["L_attn"] == 48
+    assert geometry(get_arch("zamba2-1.2b"))["L_attn"] == 6  # shared blocks
+    assert geometry(get_arch("xlstm-350m"))["L_attn"] == 0
+    g = geometry(get_arch("gemma2-27b"))
+    assert g["L_win"] == 23 and g["L_full"] == 23
+    assert geometry(get_arch("whisper-medium"))["L_attn"] == 24 + 48
