@@ -1,5 +1,9 @@
-"""End-to-end serving driver: tune → build → serve batched multi-vector
-queries through the fused (Pallas-path) scan kernels, with latency stats.
+"""End-to-end serving driver: tune → build → compile the request batch into
+plan groups → serve through the batched (Pallas-path) engine.
+
+The batch of (query, plan) pairs is compiled so each (plan-group, index)
+pair costs ONE fused-kernel dispatch instead of one per query — see
+DESIGN.md §Serving.
 
     PYTHONPATH=src python examples/serve_search.py
 """
@@ -10,7 +14,9 @@ import numpy as np
 from repro.core.types import Constraints
 from repro.core.tuner import Mint, ground_truth_cache
 from repro.data.vectors import make_database, make_queries, make_workload
-from repro.search.engine import execute_plan_fused
+from repro.index.registry import IndexStore
+from repro.serve.compiler import dispatch_plan, compile_batch
+from repro.serve.engine import BatchEngine
 
 
 def main():
@@ -21,25 +27,39 @@ def main():
     result = mint.tune(workload, Constraints(theta_recall=0.85, theta_storage=3))
     gt = ground_truth_cache(db, workload)
 
-    print("serving batched requests (fused distance+topk kernels):")
-    for q, _ in workload:
-        t0 = time.time()
-        ids, cost = execute_plan_fused(db, q, result.plans[q.qid])
-        dt = (time.time() - t0) * 1e3
-        rec = len(set(map(int, ids)) & set(map(int, gt[q.qid]))) / q.k
-        print(f"  {q.name}: top-{q.k} in {dt:6.1f} ms  "
-              f"recall={rec:.2f}  cost={cost/1e6:.2f}M dim-dists")
+    store = IndexStore(db, seed=1)
+    engine = BatchEngine(db, store=store)
 
-    # replay a burst of 32 queries on the hottest plan
-    q = workload.queries[-1]
-    burst = make_queries(db, [q.vid] * 6, k=q.k, seed=7)
+    print("serving the workload as ONE compiled batch "
+          "(fused distance+topk kernels):")
+    pairs = [(q, result.plans[q.qid]) for q, _ in workload]
     t0 = time.time()
-    for bq in burst:
-        execute_plan_fused(db, bq, result.plans[q.qid])
+    metrics = engine.execute_batch(pairs, gt_cache=gt)
+    dt = (time.time() - t0) * 1e3
+    for (q, _), m in zip(workload, metrics):
+        print(f"  {q.name}: top-{q.k}  recall={m.recall:.2f}  "
+              f"cost={m.cost/1e6:.2f}M dim-dists")
+    stats = dispatch_plan(compile_batch(pairs))
+    print(f"batch: {dt:.1f} ms total — {stats['queries']} queries compiled "
+          f"into {stats['groups']} plan groups, "
+          f"{stats['batched_scan_dispatches']} scan dispatches "
+          f"(vs {stats['per_query_scan_dispatches']} per-query); "
+          f"counters={engine.counters.as_dict()}")
+
+    # replay a burst of identical-signature queries on the hottest plan:
+    # the whole burst compiles into ONE plan group
+    q = workload.queries[-1]
+    burst = make_queries(db, [q.vid] * 16, k=q.k, seed=7)
+    burst_pairs = [(bq, result.plans[q.qid]) for bq in burst]
+    engine.counters.reset()
+    t0 = time.time()
+    engine.search_batch(burst_pairs)
     dt = time.time() - t0
     n = len(burst)
-    print(f"\nburst: {n} queries on {q.name} -> "
-          f"{dt/n*1e3:.1f} ms/query (interpret-mode kernels on CPU)")
+    print(f"\nburst: {n} queries on {q.name} -> {dt/n*1e3:.1f} ms/query, "
+          f"{engine.counters.scan} scan + {engine.counters.rerank} rerank "
+          f"dispatches for the whole burst "
+          f"(interpret-mode kernels on CPU)")
 
 
 if __name__ == "__main__":

@@ -48,12 +48,17 @@ class WhatIfContext:
     """
 
     def __init__(self, query: Query, database: MultiVectorDatabase,
-                 estimators: EstimatorBundle, k: int | None = None):
+                 estimators: EstimatorBundle, k: int | None = None,
+                 cstore=None):
+        if cstore is None:
+            from repro.serve.columnstore import ColumnStore
+            cstore = ColumnStore(database)
         self.query = query
         self.database = database
+        self.cstore = cstore  # shared per-vid concat cache (serve.columnstore)
         self.est = estimators
         self.k = int(k or query.k)
-        full = database.concat(query.vid) @ query.concat()
+        full = cstore.host(query.vid) @ query.concat()
         order = np.argsort(-full, kind="stable")
         self.gt_ids = order[: self.k]
         self._scores = {}  # vid -> (N,) partial scores
@@ -62,7 +67,7 @@ class WhatIfContext:
 
     def partial_scores(self, vid: Vid) -> np.ndarray:
         if vid not in self._scores:
-            self._scores[vid] = self.database.concat(vid) @ self.query.concat(vid)
+            self._scores[vid] = self.cstore.host(vid) @ self.query.concat(vid)
         return self._scores[vid]
 
     def ek_req(self, spec: IndexSpec) -> np.ndarray:
@@ -351,10 +356,15 @@ class QueryPlanner:
     seed: int = 0
     use_jax_dp: bool = False  # vectorized Algorithm 2 (planner_jax)
     _contexts: dict[int, WhatIfContext] = field(default_factory=dict)
+    _cstore: object = None  # shared ColumnStore across contexts
 
     def context(self, query: Query) -> WhatIfContext:
+        if self._cstore is None:
+            from repro.serve.columnstore import ColumnStore
+            self._cstore = ColumnStore(self.database)
         if query.qid not in self._contexts:
-            self._contexts[query.qid] = WhatIfContext(query, self.database, self.estimators)
+            self._contexts[query.qid] = WhatIfContext(
+                query, self.database, self.estimators, cstore=self._cstore)
         return self._contexts[query.qid]
 
     def useful_indexes(self, query: Query, config) -> list[IndexSpec]:

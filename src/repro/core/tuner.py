@@ -104,30 +104,41 @@ class ExecutionMetrics:
     recall: float        # vs full-DB exact ground truth
     num_dist: int
     eks: dict[str, int] = field(default_factory=dict)
+    ids: np.ndarray | None = None  # retrieved top-k item ids
 
 
 def execute_plan(db: MultiVectorDatabase, store: IndexStore, query: Query,
-                 plan: QueryPlan, gt_ids: np.ndarray | None = None) -> ExecutionMetrics:
-    """Run a plan on real indexes: per-index scans, then full-score rerank
-    (Eq. 4-6 accounting), and measure true recall@k."""
+                 plan: QueryPlan, gt_ids: np.ndarray | None = None,
+                 cstore=None) -> ExecutionMetrics:
+    """Per-query CPU reference: per-index scans, then full-score rerank
+    (Eq. 4-6 accounting), and measure true recall@k. Batched serving goes
+    through ``repro.serve.engine.BatchEngine`` (same accounting); this
+    path stays as the numpy oracle the batched engine is tested against.
+    ``cstore`` (a ``serve.columnstore.ColumnStore``) caches the per-vid
+    concats instead of rebuilding them per call."""
     t0 = time.time()
     k = query.k
+    concat = cstore.host if cstore is not None else db.concat
     if gt_ids is None:
-        gt_ids, _ = exact_topk(db.concat(query.vid), query.concat(), k)
+        gt_ids, _ = exact_topk(concat(query.vid), query.concat(), k)
     gt = set(int(i) for i in gt_ids)
 
-    if not plan.indexes:  # flat scan fallback
-        ids, _ = exact_topk(db.concat(query.vid), query.concat(), k)
+    # unused (ek == 0) indexes incur no scan, no rerank, no cost — the same
+    # filtering the planner's _plan_cost applies
+    used = [(x, int(ek)) for x, ek in zip(plan.indexes, plan.eks) if ek > 0]
+
+    if not used:  # flat scan fallback
+        ids, _ = exact_topk(concat(query.vid), query.concat(), k)
         wall = (time.time() - t0) * 1e3
         cost = query.dim() * db.n_rows
         rec = len(gt & set(int(i) for i in ids)) / max(len(gt), 1)
-        return ExecutionMetrics(query.qid, cost, wall, rec, db.n_rows, {})
+        return ExecutionMetrics(query.qid, cost, wall, rec, db.n_rows, {}, ids=ids)
 
     cand: list[np.ndarray] = []
     cost = 0.0
     num_dist = 0
     eks = {}
-    for spec, ek in zip(plan.indexes, plan.eks):
+    for spec, ek in used:
         idx = store.get(spec)
         res = idx.search(query.concat(spec.vid), ek)
         cand.append(res.ids)
@@ -135,21 +146,21 @@ def execute_plan(db: MultiVectorDatabase, store: IndexStore, query: Query,
         num_dist += res.num_dist
         eks[spec.name] = ek
 
-    single_exact = len(plan.indexes) == 1 and plan.indexes[0].vid == query.vid
+    single_exact = len(used) == 1 and used[0][0].vid == query.vid
     if single_exact:
         ids = cand[0][:k]
     else:
         # rerank: full score over union (cost counts duplicates — Eq. 6)
-        total_ek = int(sum(plan.eks))
+        total_ek = int(sum(ek for _, ek in used))
         cost += query.dim() * total_ek
         num_dist += total_ek
         union = np.unique(np.concatenate(cand))
-        scores = db.concat(query.vid)[union] @ query.concat()
+        scores = concat(query.vid)[union] @ query.concat()
         top = np.argsort(-scores, kind="stable")[:k]
         ids = union[top]
     wall = (time.time() - t0) * 1e3
     rec = len(gt & set(int(i) for i in ids)) / max(len(gt), 1)
-    return ExecutionMetrics(query.qid, cost, wall, rec, num_dist, eks)
+    return ExecutionMetrics(query.qid, cost, wall, rec, num_dist, eks, ids=ids)
 
 
 @dataclass
@@ -164,13 +175,26 @@ class WorkloadMetrics:
 
 def execute_workload(db: MultiVectorDatabase, store: IndexStore,
                      workload: Workload, result: TuningResult,
-                     gt_cache: dict[int, np.ndarray] | None = None) -> WorkloadMetrics:
+                     gt_cache: dict[int, np.ndarray] | None = None,
+                     batched: bool = True, engine=None) -> WorkloadMetrics:
+    """Execute every plan in the workload. The default path compiles the
+    batch into plan groups and runs it on the batched serving engine
+    (``repro.serve.engine``); ``batched=False`` keeps the per-query numpy
+    reference loop for comparison / benchmarking."""
+    if batched:
+        from repro.serve.engine import BatchEngine  # core<->serve: lazy
+        eng = engine or BatchEngine(db, store=store)
+        return eng.execute_workload(workload, result, gt_cache=gt_cache)
+
+    from repro.serve.columnstore import ColumnStore
+    cstore = ColumnStore(db)
     per_query = []
     wc = 0.0
     ww = 0.0
     for q, p in workload:
         gt = None if gt_cache is None else gt_cache.get(q.qid)
-        m = execute_plan(db, store, q, result.plans[q.qid], gt_ids=gt)
+        m = execute_plan(db, store, q, result.plans[q.qid], gt_ids=gt,
+                         cstore=cstore)
         per_query.append(m)
         wc += p * m.cost
         ww += p * m.wall_ms

@@ -66,6 +66,12 @@ def current_mesh() -> Mesh | None:
     return getattr(_STATE, "mesh", None)
 
 
+def row_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """Row-sharded (N, d) placement for database matrices — the layout the
+    serving column store and the distributed tournament scan agree on."""
+    return NamedSharding(mesh, P(axis, None))
+
+
 def shard_act(x: jnp.ndarray, layout: str) -> jnp.ndarray:
     mesh = current_mesh()
     if mesh is None:

@@ -8,10 +8,18 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable pltpu compiler params (renamed TPUCompilerParams ->
+    CompilerParams across jax releases)."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
 
 
 def pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0.0) -> jnp.ndarray:

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv, default_interpret, pad_to
+from repro.kernels.common import (cdiv, default_interpret, pad_to,
+                                  tpu_compiler_params)
 
 
 def _distance_kernel(q_ref, db_ref, qsq_ref, dbsq_ref, out_ref, acc_ref, *,
@@ -81,7 +82,7 @@ def batched_scores(q: jnp.ndarray, db: jnp.ndarray, metric: str = "dot",
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, dbp, qsqp, dbsqp)

@@ -1,20 +1,36 @@
 """Jitted public ops for the distance kernel: fused scan = scores + top-k."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.distance.kernel import batched_scores
-from repro.kernels.topk.kernel import topk_scores
+from repro.kernels.topk.kernel import NEG_INF, topk_scores
+
+
+@functools.partial(jax.jit, static_argnames=("valid_n",))
+def _mask_pad_rows(scores: jnp.ndarray, valid_n: int) -> jnp.ndarray:
+    pad = jnp.arange(scores.shape[1]) >= valid_n
+    return jnp.where(pad[None, :], NEG_INF, scores)
 
 
 def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
+               valid_n: int | None = None,
                interpret: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The TPU-native index scan: (B, d) queries over (N, d) rows -> top-k
     (values, indices). Composition of the MXU distance kernel and the
     streaming top-k kernel; this is exactly MINT's cost unit
-    (numDist = N, cost = dim * N) realized as hardware matmuls."""
+    (numDist = N, cost = dim * N) realized as hardware matmuls.
+
+    ``valid_n`` supports pre-padded device-resident databases (the serving
+    column store): rows at index >= valid_n are padding and are masked to
+    -inf so they can never win a top-k slot; k is clamped to valid_n."""
     scores = batched_scores(q, db, metric=metric, interpret=interpret)
+    if valid_n is not None and valid_n < db.shape[0]:
+        scores = _mask_pad_rows(scores, int(valid_n))
+        k = min(k, int(valid_n))
     return topk_scores(scores, k, interpret=interpret)
 
 

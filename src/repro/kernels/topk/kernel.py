@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv, default_interpret, pad_to
+from repro.kernels.common import (cdiv, default_interpret, pad_to,
+                                  tpu_compiler_params)
 
 NEG_INF = float(-3.0e38)
 
@@ -81,7 +82,7 @@ def topk_scores(scores: jnp.ndarray, k: int, bm: int = 128, bn: int = 512,
             jax.ShapeDtypeStruct((Bp, k_eff), jnp.float32),
             jax.ShapeDtypeStruct((Bp, k_eff), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(sp)

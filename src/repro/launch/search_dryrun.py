@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_bytes, extract_cost
 from repro.search.distributed import make_search_step
+from repro.serve.compiler import compile_batch, dispatch_plan
 
 
 def make_naive_search_step(mesh, k: int, axis: str = "data"):
@@ -57,6 +58,27 @@ def lower_variant(name, step_fn, mesh, n_rows, dim, n_queries):
     return {"variant": name, "collectives": colls, "cost": cost}
 
 
+def plan_group_stats(n_queries: int, k: int, seed: int = 0) -> dict:
+    """Dispatch accounting for a synthetic serving batch: how many kernel
+    dispatches the plan-group compiler saves vs query-at-a-time serving.
+    Uses hypothetical plans over a small schema — no data is touched."""
+    import numpy as np
+    from repro.core.types import IndexSpec, Query, QueryPlan
+
+    rng = np.random.default_rng(seed)
+    specs = [IndexSpec(vid=(c,), kind="ivf") for c in range(3)]
+    pairs = []
+    for qid in range(n_queries):
+        vid = tuple(sorted(rng.choice(3, size=int(rng.integers(1, 4)),
+                                      replace=False).tolist()))
+        q = Query(qid=qid, vid=vid,
+                  vectors={c: np.zeros(8, np.float32) for c in vid}, k=k)
+        used = [s for s in specs if s.vid[0] in vid]
+        eks = [int(rng.choice([k, 2 * k, 3 * k]))] * len(used)
+        pairs.append((q, QueryPlan(qid, used, eks, 0.0, 1.0)))
+    return dispatch_plan(compile_batch(pairs))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1 << 24)
@@ -72,7 +94,13 @@ def main():
     for name, fn in [("naive_gather_scores",
                       make_naive_search_step(mesh, args.k)),
                      ("tournament_topk",
-                      make_search_step(mesh, args.k))]:
+                      make_search_step(mesh, args.k)),
+                     # the serving engine's path: column-store padded rows
+                     # masked via valid_n — same collective schedule as the
+                     # plain tournament (the mask is shard-local)
+                     ("columnstore_tournament",
+                      make_search_step(mesh, args.k,
+                                       valid_n=args.rows - args.rows // 100))]:
         rec = lower_variant(name, fn, mesh, args.rows, args.dim, args.queries)
         rec.update(rows=args.rows, dim=args.dim, queries=args.queries, k=args.k,
                    mesh="2x16x16" if args.multi_pod else "16x16")
@@ -80,6 +108,12 @@ def main():
         tb = rec["collectives"]["total_bytes"]
         print(f"{name}: collective_bytes={tb/2**30:.3f} GiB "
               f"flops={rec['cost']['flops']:.3e}")
+    groups = plan_group_stats(args.queries, args.k)
+    groups["variant"] = "plan_group_compiler"
+    out.append(groups)
+    print(f"plan_group_compiler: {groups['queries']} queries -> "
+          f"{groups['batched_scan_dispatches']} scan dispatches "
+          f"(vs {groups['per_query_scan_dispatches']} per-query)")
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)

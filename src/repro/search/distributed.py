@@ -19,17 +19,27 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
-def _local_scan(db_shard, qvecs, k, shard_offset):
+from repro.kernels.topk.kernel import NEG_INF
+
+
+def _local_scan(db_shard, qvecs, k, shard_offset, valid_n=None):
     scores = qvecs @ db_shard.T                       # (Q, N_local)
+    if valid_n is not None:
+        # rows at global index >= valid_n are column-store padding
+        gids = shard_offset + jnp.arange(db_shard.shape[0])
+        scores = jnp.where((gids >= valid_n)[None, :], NEG_INF, scores)
     vals, idx = jax.lax.top_k(scores, k)
     return vals, idx + shard_offset
 
 
-def make_search_step(mesh: Mesh, k: int, axis: str = "data"):
+def make_search_step(mesh: Mesh, k: int, axis: str = "data",
+                     valid_n: int | None = None):
     """Returns search_step(db_shard_view, qvecs) -> (vals (Q,k), ids (Q,k)).
 
     db is laid out (N, d) sharded on axis 0 over ``axis``; queries are
     replicated. The merge all-gathers only (Q, k) candidates per shard.
+    ``valid_n`` marks trailing rows as column-store padding (masked out),
+    so the serving engine can scan pre-padded device-resident columns.
     """
     n_shards = mesh.shape[axis]
 
@@ -38,7 +48,7 @@ def make_search_step(mesh: Mesh, k: int, axis: str = "data"):
             rank = jax.lax.axis_index(axis)
             n_local = db_local.shape[0]
             vals, ids = _local_scan(db_local, q_local, min(k, db_local.shape[0]),
-                                    rank * n_local)
+                                    rank * n_local, valid_n=valid_n)
             # tournament merge: gather candidates only
             all_vals = jax.lax.all_gather(vals, axis)   # (S, Q, k)
             all_ids = jax.lax.all_gather(ids, axis)

@@ -1,41 +1,37 @@
-"""Query-plan execution engine bridging MINT plans to the TPU-native path.
+"""DEPRECATED shim — plan execution moved to ``repro.serve.engine``.
 
-A MINT plan (X, EK) executes as: per-index scan (IVF-Flat / flat via the
-fused distance+top-k kernels) → candidate union → full-score rerank. The
-CPU-reference path (graph indexes, numpy) lives in ``core.tuner.execute_plan``;
-this engine is the batched, jit-friendly serving form used by the serving
-example and the distributed dry-run.
+``execute_plan_fused`` used to dispatch one ``fused_scan`` per query per
+index and unconditionally added the rerank term (diverging from
+``planner._plan_cost`` and ``core.tuner.execute_plan`` on single
+exact-vid plans). It now delegates to the batched serving engine
+(``serve.engine.BatchEngine``) as a batch of one, which applies the
+single-exact-vid no-rerank fast path and the ek==0 filtering
+consistently with the planner's cost model. New code should construct a
+``BatchEngine`` and serve whole batches — that is the single execution
+path for plans.
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core.types import Query, QueryPlan
 from repro.data.vectors import MultiVectorDatabase
-from repro.kernels.distance.ops import fused_scan
 
 
 def execute_plan_fused(db: MultiVectorDatabase, query: Query, plan: QueryPlan,
                        interpret: bool | None = None):
-    """Run a plan with the fused kernels (flat scans at each index's ek)."""
-    cands = []
-    cost = 0.0
-    for spec, ek in zip(plan.indexes, plan.eks):
-        data = db.concat(spec.vid)
-        q = query.concat(spec.vid)[None, :]
-        _, ids = fused_scan(jnp.asarray(q), jnp.asarray(data),
-                            k=min(ek, data.shape[0]), interpret=interpret)
-        cands.append(np.asarray(ids)[0])
-        cost += data.shape[1] * data.shape[0]  # numDist = N for a flat scan
-    if not cands:
-        data = db.concat(query.vid)
-        q = query.concat()[None, :]
-        _, ids = fused_scan(jnp.asarray(q), jnp.asarray(data), k=query.k,
-                            interpret=interpret)
-        return np.asarray(ids)[0], query.dim() * db.n_rows
-    union = np.unique(np.concatenate(cands))
-    scores = db.concat(query.vid)[union] @ query.concat()
-    cost += query.dim() * sum(plan.eks)
-    top = np.argsort(-scores, kind="stable")[: query.k]
-    return union[top], cost
+    """Run one plan with the fused kernels (flat scans at each index's ek).
+
+    Deprecated: one-query convenience over ``BatchEngine``; batch your
+    (query, plan) pairs through ``BatchEngine.search_batch`` instead.
+    """
+    warnings.warn(
+        "repro.search.engine.execute_plan_fused is deprecated; use "
+        "repro.serve.engine.BatchEngine (batched plan-group execution)",
+        DeprecationWarning, stacklevel=2)
+    from repro.serve.engine import BatchEngine
+    eng = BatchEngine(db, store=None, interpret=interpret)
+    ids, cost = eng.execute_plan_single(query, plan)
+    return np.asarray(ids), cost

@@ -1,0 +1,23 @@
+"""Batched serving subsystem: the single execution path for MINT plans.
+
+Three layers (DESIGN.md §Serving):
+  - ``columnstore``: device-resident, kernel-block-padded column concats,
+    materialized once per vid (optionally row-sharded over a mesh);
+  - ``compiler``: groups a batch of (query, plan) pairs by plan signature so
+    each (group, index) pair costs ONE batched kernel dispatch;
+  - ``engine``: executes compiled groups on the fused Pallas kernels with
+    the same cost/recall accounting as the CPU reference harness.
+"""
+from repro.serve.columnstore import ColumnStore, DeviceColumn
+from repro.serve.compiler import PlanGroup, compile_batch, ek_bucket
+from repro.serve.engine import BatchEngine, DispatchCounters
+
+__all__ = [
+    "BatchEngine",
+    "ColumnStore",
+    "DeviceColumn",
+    "DispatchCounters",
+    "PlanGroup",
+    "compile_batch",
+    "ek_bucket",
+]

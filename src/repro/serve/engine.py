@@ -1,0 +1,313 @@
+"""Batched plan executor — the single execution path for MINT plans.
+
+Runs compiled plan groups (``serve.compiler``) over the device-resident
+column store (``serve.columnstore``):
+
+  - flat scans: ONE ``fused_scan`` dispatch per (group, index) — the Pallas
+    MXU distance kernel + streaming top-k over the padded resident matrix
+    (or the distributed tournament step when a mesh is attached);
+  - IVF: ONE batched centroid-scoring dispatch per (group, index) followed
+    by a single gathered-row scoring dispatch over the padded probe union;
+  - graph kinds (hnsw / diskann): per-query CPU search fallback (graph
+    walks don't batch), but the rerank below still batches;
+  - rerank: ONE ``batched_scores`` dispatch per group over the padded
+    candidate union, skipped on the single-exact-vid fast path — the same
+    rule ``planner._plan_cost`` uses, so executed cost matches planned cost
+    structurally.
+
+ek buckets pad *dispatch shapes* only; each query slices its own exact ek
+from the best-first results, so batched top-k ids are identical to the
+per-query paths. Cost/recall accounting (``ExecutionMetrics`` /
+``WorkloadMetrics``) follows ``core.tuner.execute_plan`` exactly: cost =
+Σ dim(x)·numDist + dim(q)·Σ ek (Eq. 4-6, duplicates counted), with wall
+time amortized over the group batch.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Query, QueryPlan, Workload
+from repro.data.vectors import MultiVectorDatabase
+from repro.index.base import exact_topk
+from repro.kernels.distance.kernel import batched_scores
+from repro.kernels.distance.ops import fused_scan
+from repro.serve.columnstore import ColumnStore, DeviceColumn
+from repro.serve.compiler import PlanGroup, compile_batch
+
+
+@dataclass
+class DispatchCounters:
+    """Kernel-dispatch accounting: ``scan`` counts ONE per (group, index)
+    batched dispatch (flat fused_scan or IVF probe), ``rerank`` one per
+    group needing the union rerank, ``fallback`` one per per-query graph
+    search that could not be batched."""
+
+    scan: int = 0
+    rerank: int = 0
+    fallback: int = 0
+
+    def reset(self) -> None:
+        self.scan = self.rerank = self.fallback = 0
+
+    def as_dict(self) -> dict:
+        return {"scan": self.scan, "rerank": self.rerank,
+                "fallback": self.fallback}
+
+
+@jax.jit
+def _gather_scores(data: jnp.ndarray, rows: jnp.ndarray, qmat: jnp.ndarray):
+    """Per-query gathered-row scoring: (N,d), (B,R) int32, (B,d) -> (B,R)."""
+    return jnp.einsum("brd,bd->br", data[rows], qmat)
+
+
+@jax.jit
+def _xla_scores(qmat: jnp.ndarray, sub: jnp.ndarray) -> jnp.ndarray:
+    return qmat @ sub.T
+
+
+class BatchEngine:
+    """Executes batches of (query, plan) pairs as compiled plan groups.
+
+    ``store`` (an ``index.registry.IndexStore``) supplies materialized
+    indexes; without one, every planned index is served as a device flat
+    scan at its ek (the pure fused-kernel serving form). ``mesh`` switches
+    flat scans to the distributed tournament step over row-sharded columns.
+    """
+
+    def __init__(self, db: MultiVectorDatabase, store=None,
+                 cstore: ColumnStore | None = None, mesh=None,
+                 axis: str = "data", interpret: bool | None = None):
+        self.db = db
+        self.store = store
+        self.mesh = mesh if mesh is not None else (cstore.mesh if cstore else None)
+        self.axis = axis
+        self.cstore = cstore or ColumnStore(db, mesh=self.mesh, axis=axis)
+        self.interpret = interpret
+        self.counters = DispatchCounters()
+        self._dist_steps: dict[tuple, object] = {}
+
+    # ---- public API -------------------------------------------------------
+
+    def search_batch(self, pairs: list[tuple[Query, QueryPlan]]) -> list[np.ndarray]:
+        """Serving form: top-k ids per query, in batch order."""
+        out: list[np.ndarray | None] = [None] * len(pairs)
+        for group in compile_batch(pairs):
+            ids_list, _, _, _ = self._run_group(group)
+            for item, ids in zip(group.items, ids_list):
+                out[item.pos] = ids
+        return out  # type: ignore[return-value]
+
+    def execute_batch(self, pairs: list[tuple[Query, QueryPlan]],
+                      gt_cache: dict[int, np.ndarray] | None = None) -> list:
+        """Measurement form: ``ExecutionMetrics`` per query, batch order."""
+        from repro.core.tuner import ExecutionMetrics  # metrics stay in core
+        out = [None] * len(pairs)
+        for group in compile_batch(pairs):
+            t0 = time.time()
+            ids_list, costs, ndists, eks_maps = self._run_group(group)
+            gts = self._group_ground_truth(group, gt_cache)
+            wall = (time.time() - t0) * 1e3 / max(group.batch, 1)
+            for item, ids, cost, nd, eks, gt in zip(
+                    group.items, ids_list, costs, ndists, eks_maps, gts):
+                gtset = set(int(i) for i in gt)
+                rec = len(gtset & set(int(i) for i in ids)) / max(len(gtset), 1)
+                out[item.pos] = ExecutionMetrics(
+                    item.query.qid, cost, wall, rec, nd, eks, ids=ids)
+        return out
+
+    def execute_workload(self, workload: Workload, result,
+                         gt_cache: dict[int, np.ndarray] | None = None):
+        from repro.core.tuner import WorkloadMetrics
+        pairs = [(q, result.plans[q.qid]) for q, _ in workload]
+        metrics = self.execute_batch(pairs, gt_cache=gt_cache)
+        wc = sum(p * m.cost for (_, p), m in zip(workload, metrics))
+        ww = sum(p * m.wall_ms for (_, p), m in zip(workload, metrics))
+        recalls = [m.recall for m in metrics]
+        return WorkloadMetrics(
+            per_query=metrics, weighted_cost=float(wc), weighted_wall_ms=float(ww),
+            min_recall=min(recalls), mean_recall=float(np.mean(recalls)),
+            storage=result.storage)
+
+    def execute_plan_single(self, query: Query, plan: QueryPlan):
+        """One-query convenience (the ``search.engine`` shim): (ids, cost)."""
+        ids_list, costs, _, _ = self._run_group(
+            compile_batch([(query, plan)])[0])
+        return ids_list[0], costs[0]
+
+    # ---- group execution --------------------------------------------------
+
+    def _run_group(self, group: PlanGroup):
+        specs, buckets = group.specs, group.buckets
+        items = group.items
+        B = len(items)
+        costs = [0.0] * B
+        ndists = [0] * B
+        eks_maps: list[dict] = [{} for _ in range(B)]
+
+        if not specs:  # flat-scan fallback group (no useful index / all ek=0)
+            col = self.cstore.device(group.key.vid)
+            qmat = col.pad_queries(
+                np.stack([it.query.concat() for it in items]))
+            ids = self._flat_scan(col, qmat, min(group.max_k, col.n_rows))
+            out_ids = []
+            for i, it in enumerate(items):
+                out_ids.append(ids[i, : min(it.query.k, col.n_rows)])
+                costs[i] = float(it.query.dim() * col.n_rows)
+                ndists[i] = col.n_rows
+            return out_ids, costs, ndists, eks_maps
+
+        cand: list[list[np.ndarray]] = [[np.empty(0, np.int64)] * len(specs)
+                                        for _ in range(B)]
+        for j, (spec, bucket) in enumerate(zip(specs, buckets)):
+            kind = spec.kind if self.store is not None else "flat"
+            for i, it in enumerate(items):
+                eks_maps[i][spec.name] = it.eks[j]
+            if kind == "ivf":
+                self._ivf_scan(group, spec, j, cand, costs, ndists)
+            elif kind == "flat":
+                col = self.cstore.device(spec.vid)
+                qmat = col.pad_queries(
+                    np.stack([it.query.concat(spec.vid) for it in items]))
+                ids = self._flat_scan(col, qmat, min(bucket, col.n_rows))
+                for i, it in enumerate(items):
+                    cand[i][j] = ids[i, : min(it.eks[j], col.n_rows)]
+                    costs[i] += float(col.dim * col.n_rows)
+                    ndists[i] += col.n_rows
+            else:  # graph kinds: sequential walks — per-query fallback
+                idx = self.store.get(spec)
+                for i, it in enumerate(items):
+                    res = idx.search(it.query.concat(spec.vid), it.eks[j])
+                    cand[i][j] = res.ids
+                    costs[i] += float(idx.dim * res.num_dist)
+                    ndists[i] += res.num_dist
+                    self.counters.fallback += 1
+
+        if group.single_exact:  # scan output is the full-score order already
+            out_ids = [cand[i][0][: items[i].query.k] for i in range(B)]
+            return out_ids, costs, ndists, eks_maps
+
+        out_ids = self._rerank(group, cand)
+        for i, it in enumerate(items):
+            total_ek = int(sum(it.eks))  # duplicates counted — Eq. 6
+            costs[i] += float(it.query.dim() * total_ek)
+            ndists[i] += total_ek
+        return out_ids, costs, ndists, eks_maps
+
+    def _batched_scores(self, qmat: jnp.ndarray, sub: jnp.ndarray) -> jnp.ndarray:
+        """One batched scoring dispatch. On TPU this is the Pallas MXU
+        kernel; under interpret mode (CPU container) the same contraction
+        goes through one jitted XLA matmul instead — interpret-mode kernels
+        execute their grid in Python, which would serialize the batch and
+        invert the benchmark."""
+        from repro.kernels.common import default_interpret
+        interp = self.interpret if self.interpret is not None else default_interpret()
+        if interp:
+            return _xla_scores(qmat, sub)
+        return batched_scores(qmat, sub, interpret=False)
+
+    def _flat_scan(self, col: DeviceColumn, qmat: jnp.ndarray, k: int) -> np.ndarray:
+        self.counters.scan += 1
+        if self.mesh is not None:
+            key = (k, col.n_rows)
+            if key not in self._dist_steps:
+                from repro.search.distributed import make_search_step
+                self._dist_steps[key] = make_search_step(
+                    self.mesh, k=k, axis=self.axis, valid_n=col.n_rows)
+            _, ids = self._dist_steps[key](col.data, qmat)
+        else:
+            _, ids = fused_scan(qmat, col.data, k=k, valid_n=col.n_rows,
+                                interpret=self.interpret)
+        return np.asarray(ids)
+
+    def _ivf_scan(self, group: PlanGroup, spec, j: int, cand, costs, ndists):
+        """Batched IVF probe: one centroid-scoring dispatch for the whole
+        group, then one gathered-row scoring dispatch over the padded probe
+        union. Per-query nprobe / top-ek use each query's ACTUAL ek so the
+        results match ``IVFFlatIndex.search`` exactly."""
+        idx = self.store.get(spec)
+        items = group.items
+        col = self.cstore.device(spec.vid)
+        qmat = col.pad_queries(
+            np.stack([it.query.concat(spec.vid) for it in items]))
+        cent = np.asarray(idx.centroids, dtype=np.float32)
+        if col.padded_dim != cent.shape[1]:
+            cent = np.pad(cent, ((0, 0), (0, col.padded_dim - cent.shape[1])))
+        csims = np.asarray(self._batched_scores(qmat, jnp.asarray(cent)))
+        self.counters.scan += 1
+
+        rows_list = []
+        for i, it in enumerate(items):
+            ek = it.eks[j]
+            nprobe = idx._nprobe_for(ek)
+            probe = np.argsort(-csims[i], kind="stable")[:nprobe]
+            rows = np.concatenate([
+                idx.row_ids[idx.offsets[p]:idx.offsets[p + 1]] for p in probe
+            ]) if nprobe else np.empty(0, dtype=np.int64)
+            rows_list.append(rows)
+            costs[i] += float(idx.dim * (idx.n_lists + rows.shape[0]))
+            ndists[i] += idx.n_lists + int(rows.shape[0])
+
+        R = max(max((r.shape[0] for r in rows_list), default=1), 1)
+        rows_mat = np.zeros((len(items), R), dtype=np.int32)
+        for i, rows in enumerate(rows_list):
+            rows_mat[i, : rows.shape[0]] = rows
+        scores = np.asarray(_gather_scores(col.data, jnp.asarray(rows_mat), qmat))
+        for i, (it, rows) in enumerate(zip(items, rows_list)):
+            if rows.shape[0] == 0:
+                cand[i][j] = np.empty(0, np.int64)
+                continue
+            s = scores[i, : rows.shape[0]]
+            ek = min(it.eks[j], rows.shape[0])
+            part = np.argpartition(-s, ek - 1)[:ek]
+            order = np.argsort(-s[part], kind="stable")
+            cand[i][j] = rows[part[order]]
+
+    def _rerank(self, group: PlanGroup, cand) -> list[np.ndarray]:
+        """Full-score rerank over each query's candidate union, batched as
+        ONE ``batched_scores`` dispatch over the group-wide union; per-query
+        selection slices its own candidates (sorted ids + stable ordering —
+        the same tie-breaking as the per-query numpy path)."""
+        items = group.items
+        col = self.cstore.device(group.key.vid)
+        unions = []
+        for i in range(len(items)):
+            parts = [c for c in cand[i] if c.shape[0]]
+            unions.append(np.unique(np.concatenate(parts)) if parts
+                          else np.empty(0, np.int64))
+        nonempty = [u for u in unions if u.shape[0]]
+        if not nonempty:
+            return [np.empty(0, np.int64) for _ in items]
+        gunion = np.unique(np.concatenate(nonempty))
+        qmat = col.pad_queries(np.stack([it.query.concat() for it in items]))
+        sub = col.data[jnp.asarray(gunion.astype(np.int32))]
+        scores = np.asarray(self._batched_scores(qmat, sub))
+        self.counters.rerank += 1
+        out = []
+        for i, it in enumerate(items):
+            if unions[i].shape[0] == 0:
+                out.append(np.empty(0, np.int64))
+                continue
+            pos = np.searchsorted(gunion, unions[i])
+            s = scores[i, pos]
+            top = np.argsort(-s, kind="stable")[: it.query.k]
+            out.append(unions[i][top])
+        return out
+
+    def _group_ground_truth(self, group: PlanGroup, gt_cache):
+        items = group.items
+        missing = [i for i, it in enumerate(items)
+                   if gt_cache is None or it.query.qid not in gt_cache]
+        gts: list[np.ndarray | None] = [
+            None if gt_cache is None else gt_cache.get(it.query.qid)
+            for it in items]
+        if missing:
+            data = self.cstore.host(group.key.vid)
+            for i in missing:
+                q = items[i].query
+                gts[i], _ = exact_topk(data, q.concat(), q.k)
+        return gts

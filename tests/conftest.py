@@ -4,6 +4,11 @@ their own XLA_FLAGS (tests/test_distributed.py)."""
 import jax
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (multi-device subprocess runs)")
+
+
 def pytest_sessionstart(session):
     n = len(jax.devices())
     assert n == 1, (

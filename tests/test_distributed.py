@@ -45,6 +45,23 @@ SCRIPT = textwrap.dedent("""
     top = np.argsort(-ref_scores)[:5]
     out["rerank_ok"] = bool(np.allclose(np.asarray(rv), ref_scores[top], rtol=1e-5))
 
+    # --- serving: row-sharded column store + batched engine flat scan ---
+    from repro.core.types import Query, QueryPlan
+    from repro.data.vectors import MultiVectorDatabase
+    from repro.serve.engine import BatchEngine
+
+    mdb = MultiVectorDatabase([np.ascontiguousarray(db[:, :16]),
+                               np.ascontiguousarray(db[:, 16:])], ["a", "b"])
+    eng = BatchEngine(mdb, store=None, mesh=mesh, axis="data")
+    queries = [Query(qid=i, vid=(0, 1),
+                     vectors={0: q[i, :16], 1: q[i, 16:]}, k=10)
+               for i in range(3)]
+    pairs = [(qq, QueryPlan(qq.qid, [], [], 0.0, 1.0)) for qq in queries]
+    got = eng.search_batch(pairs)
+    out["serve_sharded_ok"] = bool(
+        all(np.array_equal(np.asarray(got[i]), ref_ids[i]) for i in range(3)))
+    out["serve_sharded_dispatches"] = eng.counters.scan
+
     # --- sharded train step on a reduced arch + elastic reshard ---
     cfg = get_arch("qwen2-7b").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -61,7 +78,10 @@ SCRIPT = textwrap.dedent("""
     params2 = reshard_tree(jax.device_get(params_sharded), mesh2)
     with use_mesh(mesh2), mesh2:
         loss2 = jax.jit(lambda p, b: M.train_loss(cfg, p, b))(params2, batch)
-    out["elastic_loss_matches"] = bool(abs(float(loss) - float(loss2)) < 1e-2)
+    # relative tolerance: different model-axis splits re-block the matmul
+    # reductions, so f32 losses drift by reduction order, not by value
+    out["elastic_loss_matches"] = bool(
+        abs(float(loss) - float(loss2)) < 1e-2 * max(abs(float(loss)), 1.0))
 
     print("RESULT" + json.dumps(out))
 """)
@@ -78,6 +98,8 @@ def test_multidevice_subprocess():
     out = json.loads(line[len("RESULT"):])
     assert out["search_ok"]
     assert out["rerank_ok"]
+    assert out["serve_sharded_ok"]
+    assert out["serve_sharded_dispatches"] == 1  # one group, one dispatch
     assert out["mesh_fits"] == [] or all("%" not in p for p in out["mesh_fits"])
     assert out["sharded_loss_finite"]
     assert out["elastic_loss_matches"]

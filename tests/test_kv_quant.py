@@ -3,6 +3,7 @@ memory-term optimization, EXPERIMENTS.md §Perf)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import get_arch
 from repro.models import model as M
@@ -53,6 +54,7 @@ def test_int8_kv_decode_parity():
 
 def test_quantize_roundtrip_bound():
     """Property: dequantization error ≤ scale/2 per element (hypothesis sweep)."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed (dev dep)")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=30, deadline=None)

@@ -1,6 +1,9 @@
 """Hypothesis property tests for MINT's algorithmic invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (dev dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.estimators import LinearFit, LogFit, fit_linear, fit_log
 from repro.core.planner import _coverage, _relevant_eks

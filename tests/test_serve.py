@@ -1,0 +1,291 @@
+"""Tests for the batched serving subsystem (serve.columnstore / compiler /
+engine) and the executed-cost alignment across all execution paths."""
+import numpy as np
+import pytest
+
+from repro.core.planner import WhatIfContext, _plan_cost, algorithm1_search
+from repro.core.tuner import (Mint, execute_plan, execute_workload,
+                              ground_truth_cache)
+from repro.core.types import Constraints, IndexSpec, Query, QueryPlan
+from repro.data.vectors import make_database, make_queries, make_workload
+from repro.index.registry import IndexStore
+from repro.serve.columnstore import ColumnStore
+from repro.serve.compiler import (MIN_BUCKET, compile_batch, dispatch_plan,
+                                  ek_bucket)
+from repro.serve.engine import BatchEngine
+
+N_ROWS = 2500
+K = 10
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(N_ROWS, [("a", 32), ("b", 48), ("c", 24)], seed=0)
+
+
+@pytest.fixture(scope="module")
+def tuned(db):
+    mint = Mint(db, index_kind="ivf", seed=0, min_sample_rows=600)
+    workload = make_workload(db, "naive", k=K, seed=0)
+    result = mint.tune(workload, Constraints(theta_recall=0.85, theta_storage=3))
+    return mint, workload, result
+
+
+@pytest.fixture(scope="module")
+def store(db):
+    return IndexStore(db, seed=0)
+
+
+@pytest.fixture(scope="module")
+def gt(db, tuned):
+    return ground_truth_cache(db, tuned[1])
+
+
+# ---- column store ---------------------------------------------------------
+
+
+def test_columnstore_host_cache_and_device_padding(db):
+    cs = ColumnStore(db, block_rows=128, block_dim=128)
+    a = cs.host((0, 1))
+    assert a is cs.host((1, 0))  # cached, vid-normalized
+    np.testing.assert_array_equal(a, db.concat((0, 1)))
+    col = cs.device((0, 1))
+    assert col.n_rows == db.n_rows and col.dim == 80
+    assert col.data.shape[0] % 128 == 0 and col.data.shape[1] % 128 == 0
+    assert col.data.shape[0] >= db.n_rows
+    # zero padding: valid region matches, pad region is zero
+    dev = np.asarray(col.data)
+    np.testing.assert_allclose(dev[: col.n_rows, : col.dim], a, rtol=1e-6)
+    assert not dev[col.n_rows:, :].any()
+    # padded queries keep the score geometry
+    q = np.random.default_rng(0).standard_normal((3, 80)).astype(np.float32)
+    qp = np.asarray(col.pad_queries(q))
+    np.testing.assert_allclose(qp @ dev.T[:, : col.n_rows], q @ a.T, atol=1e-4)
+
+
+# ---- compiler -------------------------------------------------------------
+
+
+def test_ek_bucket_pads_to_pow2():
+    assert ek_bucket(0) == 0
+    assert ek_bucket(1) == MIN_BUCKET
+    assert ek_bucket(MIN_BUCKET) == MIN_BUCKET
+    assert ek_bucket(MIN_BUCKET + 1) == 2 * MIN_BUCKET
+    assert ek_bucket(1000) == 1024
+
+
+def test_compiler_groups_by_signature(db):
+    spec_a = IndexSpec(vid=(0,), kind="ivf")
+    spec_b = IndexSpec(vid=(1,), kind="ivf")
+    qs = make_queries(db, [(0, 1)] * 4 + [(0,)] * 2, k=K, seed=1)
+    plans = [
+        QueryPlan(qs[0].qid, [spec_a, spec_b], [40, 50], 0.0, 1.0),
+        QueryPlan(qs[1].qid, [spec_a, spec_b], [33, 60], 0.0, 1.0),  # same buckets
+        QueryPlan(qs[2].qid, [spec_a], [40], 0.0, 1.0),              # fewer indexes
+        QueryPlan(qs[3].qid, [spec_a, spec_b], [400, 50], 0.0, 1.0),  # other bucket
+        QueryPlan(qs[4].qid, [spec_a], [40], 0.0, 1.0),
+        QueryPlan(qs[5].qid, [spec_a], [40], 0.0, 1.0),
+    ]
+    groups = compile_batch(list(zip(qs, plans)))
+    # q0+q1 group (same signature); q2 alone (vid (0,1), one index); q3 alone
+    # (different ek bucket); q4+q5 group (vid (0,), single exact index)
+    assert sorted(g.batch for g in groups) == [1, 1, 2, 2]
+    single = [g for g in groups if g.key.vid == (0,)][0]
+    assert single.single_exact
+    stats = dispatch_plan(groups)
+    assert stats["queries"] == 6
+    assert stats["batched_scan_dispatches"] == 2 + 1 + 2 + 1
+    assert stats["per_query_scan_dispatches"] == 2 + 2 + 1 + 2 + 1 + 1
+
+
+def test_compiler_filters_ek_zero(db):
+    """ek == 0 entries (unused indexes) must never reach a dispatch."""
+    spec_a = IndexSpec(vid=(0,), kind="ivf")
+    spec_b = IndexSpec(vid=(1,), kind="ivf")
+    q = make_queries(db, [(0, 1)], k=K, seed=2)[0]
+    plan = QueryPlan(q.qid, [spec_a, spec_b], [40, 50], 0.0, 1.0)
+    plan.eks = [0, 50]  # simulate a plan that kept an unused index
+    [group] = compile_batch([(q, plan)])
+    assert group.specs == [spec_b]
+    assert [item.eks for item in group.items] == [[50]]
+
+
+# ---- batched engine: identity with the per-query paths --------------------
+
+
+def test_batched_ids_identical_to_per_query(db, tuned, store, gt):
+    """Acceptance: the batched engine returns exactly the per-query top-k."""
+    _, workload, result = tuned
+    pairs = [(q, result.plans[q.qid]) for q, _ in workload]
+    engine = BatchEngine(db, store=store)
+    metrics = engine.execute_batch(pairs, gt_cache=gt)
+    for (q, _), m in zip(workload, metrics):
+        ref = execute_plan(db, store, q, result.plans[q.qid], gt_ids=gt[q.qid])
+        np.testing.assert_array_equal(np.asarray(m.ids), np.asarray(ref.ids))
+        assert m.cost == ref.cost
+        assert m.num_dist == ref.num_dist
+        assert m.recall == ref.recall
+
+
+def test_batched_burst_identical_and_one_dispatch_per_group_index(db, tuned, store):
+    """Acceptance: a same-signature burst costs ONE scan dispatch per
+    (plan-group, index), not one per (query, index)."""
+    _, workload, result = tuned
+    q = workload.queries[1]
+    plan = result.plans[q.qid]
+    burst = make_queries(db, [q.vid] * 8, k=q.k, seed=7)
+    pairs = [(bq, plan) for bq in burst]
+    groups = compile_batch(pairs)
+    assert len(groups) == 1  # one signature -> one group
+
+    engine = BatchEngine(db, store=store)
+    ids = engine.search_batch(pairs)
+    n_pairs = sum(max(len(g.specs), 1) for g in groups)
+    assert engine.counters.scan == n_pairs  # NOT len(burst) * n_indexes
+    assert engine.counters.scan < len(burst) * max(len(plan.indexes), 1)
+    assert engine.counters.fallback == 0  # ivf/flat fully batched
+    for bq, got in zip(burst, ids):
+        ref = execute_plan(db, store, bq, plan)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.ids))
+
+
+def test_workload_execution_batched_matches_reference(db, tuned, store, gt):
+    _, workload, result = tuned
+    wm = execute_workload(db, store, workload, result, gt)           # batched
+    ref = execute_workload(db, store, workload, result, gt, batched=False)
+    assert wm.weighted_cost == pytest.approx(ref.weighted_cost)
+    assert wm.mean_recall == pytest.approx(ref.mean_recall)
+    for a, b in zip(wm.per_query, ref.per_query):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+def test_graph_store_falls_back_per_query_but_batches_rerank(db, gt):
+    mint = Mint(db, index_kind="hnsw", seed=0, min_sample_rows=600)
+    workload = make_workload(db, "naive", k=K, seed=0)
+    result = mint.tune(workload, Constraints(theta_recall=0.85, theta_storage=3))
+    store = IndexStore(db, seed=0)
+    engine = BatchEngine(db, store=store)
+    pairs = [(q, result.plans[q.qid]) for q, _ in workload]
+    metrics = engine.execute_batch(pairs)
+    for (q, _), m in zip(workload, metrics):
+        ref = execute_plan(db, store, q, result.plans[q.qid])
+        np.testing.assert_array_equal(np.asarray(m.ids), np.asarray(ref.ids))
+        assert m.cost == ref.cost
+
+
+# ---- ek == 0 execution regression (satellite) -----------------------------
+
+
+def test_algorithm1_plans_carry_no_zero_eks(db, tuned):
+    mint, workload, _ = tuned
+    ctx = WhatIfContext(workload.queries[3], db, mint.estimators)
+    specs = [IndexSpec(vid=(c,), kind="ivf") for c in (0, 1, 2)]
+    plan = algorithm1_search(ctx, specs, theta_recall=0.85)
+    assert plan is not None
+    assert all(ek > 0 for ek in plan.eks)
+    assert len(plan.indexes) == len(plan.eks)
+
+
+def test_executors_skip_ek_zero_indexes(db, store, gt, tuned):
+    """A (mutated) plan with an ek=0 entry must not scan that index — in
+    the per-query path, the batched engine, and the cost accounting."""
+    _, workload, result = tuned
+    q = workload.queries[1]
+    base = result.plans[q.qid]
+    extra = IndexSpec(vid=(q.vid[-1],), kind="ivf")
+    plan = QueryPlan(q.qid, list(base.indexes), list(base.eks), 0.0, 1.0)
+    plan.indexes = plan.indexes + [extra]
+    plan.eks = plan.eks + [0]
+
+    ref = execute_plan(db, store, q, base, gt_ids=gt[q.qid])
+    with_zero = execute_plan(db, store, q, plan, gt_ids=gt[q.qid])
+    assert with_zero.cost == ref.cost
+    assert with_zero.num_dist == ref.num_dist
+    assert extra.name not in with_zero.eks
+    np.testing.assert_array_equal(np.asarray(with_zero.ids), np.asarray(ref.ids))
+
+    engine = BatchEngine(db, store=store)
+    [m] = engine.execute_batch([(q, plan)], gt_cache=gt)
+    assert m.cost == ref.cost
+    assert extra.name not in m.eks
+    np.testing.assert_array_equal(np.asarray(m.ids), np.asarray(ref.ids))
+
+
+# ---- cost alignment across planner / CPU / fused / batched (satellite) ----
+
+
+def _flat_spec_plan(db, q, vids, eks):
+    specs = [IndexSpec(vid=v, kind="flat") for v in vids]
+    return QueryPlan(q.qid, specs, eks, 0.0, 1.0)
+
+
+@pytest.mark.parametrize("executor", ["cpu", "fused", "batched"])
+def test_single_exact_vid_fast_path_cost(db, executor, tuned):
+    """Single exact-vid plans skip the rerank term in every executor — the
+    same rule as planner._plan_cost (flat kind: scan cost is dim * N)."""
+    q = make_queries(db, [(0, 1)], k=K, seed=9)[0]
+    ek = 64
+    plan = _flat_spec_plan(db, q, [(0, 1)], [ek])
+    scan_only = db.dim((0, 1)) * db.n_rows
+    with_rerank = scan_only + q.dim() * ek
+    cost = _executed_cost(db, executor, q, plan)
+    assert cost == pytest.approx(scan_only)
+    assert cost < with_rerank
+
+
+@pytest.mark.parametrize("executor", ["cpu", "fused", "batched"])
+def test_multi_index_plans_pay_rerank(db, executor):
+    q = make_queries(db, [(0, 1)], k=K, seed=10)[0]
+    eks = [32, 48]
+    plan = _flat_spec_plan(db, q, [(0,), (1,)], eks)
+    scan = (db.dim((0,)) + db.dim((1,))) * db.n_rows
+    expected = scan + q.dim() * sum(eks)
+    assert _executed_cost(db, executor, q, plan) == pytest.approx(expected)
+
+
+def test_plan_cost_estimator_applies_same_rules(db, tuned):
+    """planner._plan_cost: rerank term present iff not single-exact-vid,
+    ek==0 excluded — structurally identical to the executors."""
+    mint, workload, _ = tuned
+    q = make_queries(db, [(0, 1)], k=K, seed=11)[0]
+    ctx = WhatIfContext(q, db, mint.estimators)
+    exact = IndexSpec(vid=(0, 1), kind="ivf")
+    partial = IndexSpec(vid=(0,), kind="ivf")
+    ek = 64.0
+    scan = float(ctx.est.cost_idx(exact, ek))
+    assert _plan_cost(ctx, [exact], [ek]) == pytest.approx(scan)
+    both = _plan_cost(ctx, [exact, partial], [ek, ek])
+    assert both == pytest.approx(scan + float(ctx.est.cost_idx(partial, ek))
+                                 + q.dim() * 2 * ek)
+    # ek == 0 contributes nothing (and restores the fast path)
+    assert _plan_cost(ctx, [exact, partial], [ek, 0.0]) == pytest.approx(scan)
+
+
+def _executed_cost(db, executor, q, plan):
+    if executor == "cpu":
+        store = IndexStore(db, seed=0)
+        return execute_plan(db, store, q, plan).cost
+    if executor == "fused":
+        from repro.search.engine import execute_plan_fused
+        with pytest.warns(DeprecationWarning):
+            _, cost = execute_plan_fused(db, q, plan)
+        return cost
+    engine = BatchEngine(db, store=None)
+    _, cost = engine.execute_plan_single(q, plan)
+    return cost
+
+
+# ---- fused_scan valid_n (kernels layer) -----------------------------------
+
+
+def test_fused_scan_valid_n_masks_padding():
+    from repro.kernels.distance.ops import fused_scan
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal((200, 32)).astype(np.float32) - 2.0  # all < 0 scores region
+    q = rng.standard_normal((2, 32)).astype(np.float32)
+    padded = np.pad(data, ((0, 56), (0, 0)))  # zero rows would win without mask
+    _, ids_ref = fused_scan(jnp.asarray(q), jnp.asarray(data), k=5)
+    _, ids_pad = fused_scan(jnp.asarray(q), jnp.asarray(padded), k=5, valid_n=200)
+    np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids_pad))
+    assert (np.asarray(ids_pad) < 200).all()
