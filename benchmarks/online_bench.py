@@ -1,0 +1,160 @@
+"""Online serving runtime under drift: background re-tuning vs stale plans.
+
+Tunes on a "day" workload (columns 0/1), then serves a steady day segment
+followed by a diurnal drift into a "night" workload (columns 2/3). Two
+runtimes serve the identical trace:
+
+  - stale   : drift detection disabled — the day configuration and its
+              plan-cache templates serve the night traffic (unseen vids
+              degrade to flat scans);
+  - retuned : the drift detector fires mid-drift, the background re-tuner
+              re-runs Mint.tune on the observed window, shadow-builds the
+              night configuration, and atomically swaps it in.
+
+Reports, on the drifted evaluation window: mean executed cost (the paper's
+dim-weighted distance proxy), mean recall vs theta_recall, and amortized
+execution wall time — plus the plan-cache hit rate on the steady segment
+and a burst-scenario micro-batching summary. Emits BENCH_online.json.
+
+    PYTHONPATH=src python benchmarks/online_bench.py [--rows 10000]
+"""
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.types import Constraints, Workload
+from repro.core.tuner import Mint
+from repro.data.vectors import make_database, make_queries
+from repro.index.registry import IndexStore
+from repro.online import (OnlineRuntime, RuntimeConfig, burst_trace,
+                          diurnal_trace, steady_trace)
+
+
+def vid_workload(db, vids, k, seed):
+    qs = make_queries(db, vids, k=k, seed=seed)
+    return Workload(queries=qs, probs=np.ones(len(qs)))
+
+
+def window_metrics(tickets, theta_recall) -> dict:
+    ms = [t.metrics for t in tickets]
+    return {
+        "queries": len(ms),
+        "mean_cost": float(np.mean([m.cost for m in ms])),
+        "p50_cost": float(np.percentile([m.cost for m in ms], 50)),
+        "mean_recall": float(np.mean([m.recall for m in ms])),
+        "min_recall": float(np.min([m.recall for m in ms])),
+        "theta_recall_met": bool(np.mean([m.recall for m in ms])
+                                 >= theta_recall),
+        "mean_exec_wall_ms": float(np.mean([m.wall_ms for m in ms])),
+    }
+
+
+def run_variant(db, mint, day, cons, result, store, steady, drifted,
+                retune: bool) -> dict:
+    cfg = RuntimeConfig(max_batch=16, max_delay_ms=5.0, window=96,
+                        min_window=48, cooldown_s=0.02, measure=True,
+                        drift_threshold=0.35 if retune else 2.0)
+    rt = OnlineRuntime(db, mint, day, cons, result=result, store=store,
+                       config=cfg)
+    rt.run_trace(steady)
+    steady_cache = rt.cache.stats()
+    rt.cache.reset_counters()
+    tickets = rt.run_trace(drifted)
+    n_eval = len(drifted) // 3  # night-dominated tail of the diurnal shift
+    out = {
+        "steady_plan_cache": steady_cache,
+        "drift_tail": window_metrics(tickets[-n_eval:], cons.theta_recall),
+        "batcher": rt.batcher.stats.as_dict(),
+        "retunes": [vars(e) for e in rt.retune_events],
+        "generation": rt.generation,
+        "serving_config": sorted(s.name for s in rt.result.configuration),
+        "store_size": len(rt.store.built_specs()),
+    }
+    return out
+
+
+def burst_summary(db, mint, day, cons, result, store) -> dict:
+    """Modality burst: the micro-batcher should amortize the burst into
+    few, large plan groups (dispatch counts vs query count)."""
+    cfg = RuntimeConfig(max_batch=16, max_delay_ms=5.0, window=96,
+                        min_window=48, cooldown_s=1e9, drift_threshold=2.0)
+    rt = OnlineRuntime(db, mint, day, cons, result=result, store=store,
+                       config=cfg)
+    trace = burst_trace(db, day, burst_vid=(0, 1), n=160, qps=2000.0,
+                        seed=11, qid_start=50_000)
+    rt.run_trace(trace)
+    st = rt.stats()
+    return {"queries": len(trace), "batches": st["batcher"]["batches"],
+            "mean_batch": st["batcher"]["mean_batch"],
+            "scan_dispatches": st["dispatches"]["scan"],
+            "plan_cache_hit_rate": st["plan_cache"]["hit_rate"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=10000)
+    ap.add_argument("--steady-n", type=int, default=120)
+    ap.add_argument("--drift-n", type=int, default=180)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_online.json")
+    args = ap.parse_args()
+
+    db = make_database(args.rows, [("image", 96), ("title", 64),
+                                   ("description", 128), ("content", 96)],
+                       seed=0)
+    day = vid_workload(db, [(0,), (0, 1), (1,)], k=args.k, seed=0)
+    night = vid_workload(db, [(2,), (2, 3), (3,)], k=args.k, seed=1)
+    cons = Constraints(theta_recall=0.9, theta_storage=3)
+    mint = Mint(db, index_kind="ivf", seed=0)
+    result = mint.tune(day, cons)
+
+    qps = 2000.0
+    steady = steady_trace(db, day, n=args.steady_n, qps=qps, seed=3)
+    t0 = args.steady_n / qps + 1.0
+    drifted = diurnal_trace(db, day, night, n=args.drift_n, qps=qps, seed=4,
+                            t0=t0, qid_start=10_000)
+
+    variants = {}
+    for name, retune in [("stale", False), ("retuned", True)]:
+        store = IndexStore(db, seed=0)  # fresh store per variant
+        variants[name] = run_variant(db, mint, day, cons, result, store,
+                                     steady, drifted, retune=retune)
+        tail = variants[name]["drift_tail"]
+        print(f"{name:8s} drift-tail: mean_cost={tail['mean_cost']:.0f} "
+              f"mean_recall={tail['mean_recall']:.3f} "
+              f"exec_wall={tail['mean_exec_wall_ms']:.2f}ms "
+              f"(retunes={len(variants[name]['retunes'])})")
+
+    stale_cost = variants["stale"]["drift_tail"]["mean_cost"]
+    retuned_cost = variants["retuned"]["drift_tail"]["mean_cost"]
+    hit_rate = variants["retuned"]["steady_plan_cache"]["hit_rate"]
+    out = {
+        "scenario": "diurnal day->night drift",
+        "rows": args.rows,
+        "k": args.k,
+        "theta_recall": cons.theta_recall,
+        "theta_storage": cons.theta_storage,
+        "steady_queries": args.steady_n,
+        "drift_queries": args.drift_n,
+        "variants": variants,
+        "burst": burst_summary(db, mint, day, cons, result,
+                               IndexStore(db, seed=0)),
+        "drift_tail_cost_ratio_stale_over_retuned":
+            stale_cost / max(retuned_cost, 1e-9),
+        "acceptance": {
+            "retuned_beats_stale_on_drift": retuned_cost < stale_cost,
+            "retuned_recall_theta_met":
+                variants["retuned"]["drift_tail"]["theta_recall_met"],
+            "steady_plan_cache_hit_rate_gt_0.8": hit_rate > 0.8,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out["acceptance"], indent=1))
+    print(f"cost ratio (stale/retuned) on drift tail: "
+          f"{out['drift_tail_cost_ratio_stale_over_retuned']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 verification, reproducibly: bytecode-compile the whole tree, then
+# run the fast test lane (pytest.ini deselects slow-marked tests).
+#
+#   scripts/verify.sh            # fast lane (a few minutes)
+#   scripts/verify.sh --slow     # slow lane only (kernel sweeps, arch smoke)
+#   scripts/verify.sh --full     # everything
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m compileall -q src benchmarks examples tests
+
+case "${1:-}" in
+  --slow) exec python -m pytest -q -m slow ;;
+  --full) exec python -m pytest -q -m "" ;;
+  *)      exec python -m pytest -x -q ;;
+esac

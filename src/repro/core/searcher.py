@@ -38,11 +38,14 @@ class BeamSearchParams:
 
 class ConfigurationSearcher:
     def __init__(self, planner: QueryPlanner, workload: Workload,
-                 constraints: Constraints, params: BeamSearchParams | None = None):
+                 constraints: Constraints, params: BeamSearchParams | None = None,
+                 extra_seeds: list[frozenset] | None = None):
         self.planner = planner
         self.workload = workload
         self.constraints = constraints
         self.params = params or BeamSearchParams()
+        # warm-start seeds (online retune: the currently serving config)
+        self.extra_seeds = list(extra_seeds or [])
         self.storage_est = StorageEstimator(
             n_rows=planner.estimators.n_rows, mode=constraints.storage_mode)
         self._plan_cache: dict[tuple[int, frozenset], QueryPlan] = {}
@@ -68,6 +71,8 @@ class ConfigurationSearcher:
 
     def seeds(self) -> list[frozenset]:
         out: dict[frozenset, None] = {}
+        for seed in self.extra_seeds:
+            out[frozenset(seed)] = None
         for q in self.workload.queries:
             cands = self.candidates_for(q)
             for r in range(1, self.params.se + 1):

@@ -52,16 +52,33 @@ class Mint:
                             theta_recall=constraints.theta_recall, seed=self.seed)
 
     def tune(self, workload: Workload, constraints: Constraints,
-             params: BeamSearchParams | None = None) -> TuningResult:
+             params: BeamSearchParams | None = None,
+             warm_start: TuningResult | None = None) -> TuningResult:
         params = params or BeamSearchParams(index_kind=self.index_kind)
         params.index_kind = self.index_kind
         planner = self.planner(constraints)
-        searcher = ConfigurationSearcher(planner, workload, constraints, params)
+        extra = ([frozenset(warm_start.configuration)]
+                 if warm_start is not None and warm_start.configuration else [])
+        searcher = ConfigurationSearcher(planner, workload, constraints, params,
+                                         extra_seeds=extra)
         result = searcher.search()
         result.trace.append({"what_if_calls": searcher.what_if_calls,
                              "cache_hits": searcher.cache_hits,
-                             "train_seconds": self.estimators.train_seconds})
+                             "train_seconds": self.estimators.train_seconds,
+                             "warm_start": warm_start is not None})
         return result
+
+    def retune(self, workload: Workload, constraints: Constraints,
+               params: BeamSearchParams | None = None,
+               warm_start: TuningResult | None = None) -> TuningResult:
+        """Incremental re-tune for the online runtime: estimators are
+        reused (same database), and the beam search is warm-started by
+        seeding it with the currently serving configuration — the search
+        starts from the serving state instead of from scratch, so a small
+        drift converges in very few iterations while a large one can still
+        walk to a different configuration."""
+        return self.tune(workload, constraints, params=params,
+                         warm_start=warm_start)
 
     # ---- baselines (paper Section 5.1 'Approaches') ----
     def per_column(self, workload: Workload, constraints: Constraints) -> TuningResult:

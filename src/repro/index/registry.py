@@ -48,3 +48,19 @@ class IndexStore:
 
     def built_specs(self) -> list[IndexSpec]:
         return list(self._cache)
+
+    def drop(self, spec: IndexSpec) -> bool:
+        """Free one built index (returns whether it existed)."""
+        return self._cache.pop(spec, None) is not None
+
+    def prune(self, keep) -> list[IndexSpec]:
+        """Drop every built index not in ``keep`` — the shadow-swap cleanup
+        of the online runtime: after a re-tuned configuration goes live,
+        stale indexes are released so the storage constraint holds for the
+        *serving* set, not the union of old and new. Returns the dropped
+        specs."""
+        keep = frozenset(keep)
+        dropped = [spec for spec in self._cache if spec not in keep]
+        for spec in dropped:
+            del self._cache[spec]
+        return dropped

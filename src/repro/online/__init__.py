@@ -1,0 +1,22 @@
+"""Online serving runtime (DESIGN.md §7).
+
+Sits on top of ``repro.serve``: micro-batching scheduler, plan cache,
+workload monitor + drift detector, and the background re-tuner that
+shadow-builds a re-tuned configuration and atomically swaps it in.
+"""
+from repro.online.monitor import (DriftDetector, DriftReport, WorkloadMonitor,
+                                  reference_histogram, total_variation)
+from repro.online.plancache import PlanCache
+from repro.online.retuner import BackgroundRetuner, RetuneEvent
+from repro.online.runtime import OnlineRuntime, RuntimeConfig
+from repro.online.scheduler import MicroBatcher, Ticket
+from repro.online.trace import (TimedQuery, burst_trace, diurnal_trace,
+                                hot_item_trace, make_trace, steady_trace)
+
+__all__ = [
+    "BackgroundRetuner", "DriftDetector", "DriftReport", "MicroBatcher",
+    "OnlineRuntime", "PlanCache", "RetuneEvent", "RuntimeConfig", "Ticket",
+    "TimedQuery", "WorkloadMonitor", "burst_trace", "diurnal_trace",
+    "hot_item_trace", "make_trace", "reference_histogram", "steady_trace",
+    "total_variation",
+]

@@ -1,0 +1,124 @@
+"""Plan cache: the planner off the serving hot path (DESIGN.md §7).
+
+``QueryPlanner.plan`` builds a ``WhatIfContext`` per query — an exact
+full-database ground truth plus per-index rank scans — which is fine at
+tuning time but far too slow per request. The cache templates planner
+output by *plan key*: (query vid, k, constraints fingerprint, generation).
+Two queries on the same columns at the same k get the same (X, EK)
+template; only the first pays the planner.
+
+The generation counter is the atomic-swap handle: a background re-tune
+bumps it and re-seeds templates from the new tuning result, so in-flight
+keys of the old generation can never serve a stale plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.types import (Constraints, IndexSpec, Query, QueryPlan,
+                              TuningResult, Vid, Workload)
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    vid: Vid
+    k: int
+    constraints: tuple  # constraints_fingerprint(...)
+    generation: int
+
+
+@dataclass
+class PlanTemplate:
+    """A reusable (X, EK) shape: instantiate() stamps it with a qid."""
+
+    indexes: list[IndexSpec]
+    eks: list[int]
+    est_cost: float
+    est_recall: float
+
+    @classmethod
+    def from_plan(cls, plan: QueryPlan) -> "PlanTemplate":
+        return cls(indexes=list(plan.indexes), eks=list(plan.eks),
+                   est_cost=plan.est_cost, est_recall=plan.est_recall)
+
+    def instantiate(self, query: Query) -> QueryPlan:
+        return QueryPlan(query_qid=query.qid, indexes=list(self.indexes),
+                         eks=list(self.eks), est_cost=self.est_cost,
+                         est_recall=self.est_recall)
+
+
+def constraints_fingerprint(constraints: Constraints) -> tuple:
+    return (round(constraints.theta_recall, 6), constraints.theta_storage,
+            constraints.storage_mode)
+
+
+@dataclass
+class PlanCache:
+    """Generation-keyed template store with hit/miss accounting."""
+
+    constraints: tuple = ()
+    generation: int = 0
+    hits: int = 0
+    misses: int = 0
+    swaps: int = 0
+    _entries: dict[PlanKey, PlanTemplate] = field(default_factory=dict)
+
+    def key(self, query: Query) -> PlanKey:
+        return PlanKey(vid=query.vid, k=query.k, constraints=self.constraints,
+                       generation=self.generation)
+
+    def get(self, query: Query) -> QueryPlan | None:
+        tpl = self._entries.get(self.key(query))
+        if tpl is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return tpl.instantiate(query)
+
+    def peek(self, query: Query) -> QueryPlan | None:
+        """Like get() but without touching the hit/miss counters — for
+        introspection (e.g. the re-tuner's stale-cost probe) that must not
+        pollute the serving metrics."""
+        tpl = self._entries.get(self.key(query))
+        return None if tpl is None else tpl.instantiate(query)
+
+    def put(self, query: Query, plan: QueryPlan) -> None:
+        self._entries[self.key(query)] = PlanTemplate.from_plan(plan)
+
+    def seed(self, workload: Workload, result: TuningResult) -> int:
+        """Template the tuning result's plans by vid (first writer per key
+        wins — later queries of the same vid share one template)."""
+        n = 0
+        for q in workload.queries:
+            plan = result.plans.get(q.qid)
+            if plan is None:
+                continue
+            k = self.key(q)
+            if k not in self._entries:
+                self._entries[k] = PlanTemplate.from_plan(plan)
+                n += 1
+        return n
+
+    def bump_generation(self) -> int:
+        """Invalidate every cached template (atomic-swap handle): all
+        entries belong to older generations, so drop them all."""
+        self.generation += 1
+        self.swaps += 1
+        self._entries = {}
+        return self.generation
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate, "entries": len(self._entries),
+                "generation": self.generation, "swaps": self.swaps}

@@ -1,0 +1,110 @@
+"""Drift-aware background re-tuner (DESIGN.md §7).
+
+When the drift detector fires, the re-tuner rebuilds a tuning workload from
+the monitor's observation window, re-runs ``Mint.retune`` (estimators are
+reused; the beam is warm-started from the serving configuration),
+shadow-builds every index of the winning configuration through the live
+``IndexStore`` (invisible to serving — plans of the old generation never
+reference them), and then asks the runtime for an atomic swap: tuning
+result + plan-cache generation + store prune under the same storage
+constraint. ``mode="thread"`` runs the tune+build off the serving path and
+applies the swap when it completes; ``mode="sync"`` (default) does it
+inline, which is deterministic for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class RetuneEvent:
+    t: float
+    drift: float
+    generation: int            # generation AFTER the swap
+    window: int                # observation-window size used
+    est_cost_before: float     # stale config's estimated cost on the window
+    est_cost_after: float      # re-tuned estimated cost on the window
+    config_before: int         # |configuration|
+    config_after: int
+    built: int                 # indexes shadow-built for the swap
+    dropped: int               # stale indexes pruned after the swap
+    tune_seconds: float
+
+
+class BackgroundRetuner:
+    """Owns the drift → retune → shadow-build → swap lifecycle."""
+
+    def __init__(self, runtime, cooldown_s: float = 60.0, mode: str = "sync",
+                 reps_per_vid: int = 3):
+        if mode not in ("sync", "thread"):
+            raise ValueError(f"unknown retune mode {mode!r}")
+        self.runtime = runtime
+        self.cooldown_s = cooldown_s
+        self.mode = mode
+        self.reps_per_vid = reps_per_vid
+        self.events: list[RetuneEvent] = []
+        self._last_fire: float | None = None
+        self._worker: threading.Thread | None = None
+
+    @property
+    def inflight(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def maybe_retune(self, now: float) -> RetuneEvent | None:
+        """Called from the serving loop's tick. Fires at most once per
+        cooldown, and never while a background tune is in flight."""
+        if self.inflight:
+            return None
+        if self._last_fire is not None and now - self._last_fire < self.cooldown_s:
+            return None
+        report = self.runtime.detector.check(self.runtime.monitor)
+        if not report.drifted:
+            return None
+        self._last_fire = now
+        if self.mode == "thread":
+            self._worker = threading.Thread(
+                target=self._retune, args=(now, report.drift), daemon=True)
+            self._worker.start()
+            return None
+        return self._retune(now, report.drift)
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._worker is not None:
+            self._worker.join(timeout)
+
+    def _retune(self, now: float, drift: float) -> RetuneEvent:
+        rt = self.runtime
+        t0 = time.time()
+        observed = rt.monitor.observed_workload(reps_per_vid=self.reps_per_vid)
+        # Stale-cost probe via peek(): served queries are always templated
+        # (plan_for caches on miss), and a counter-free read keeps the
+        # exported hit-rate metric pure serving traffic. The rare untemplated
+        # query is costed as the flat-scan fallback the stale config would
+        # serve it with.
+        stale_cost = 0.0
+        for q, p in observed:
+            plan = rt.cache.peek(q)
+            stale_cost += p * (plan.est_cost if plan is not None
+                               else q.dim() * float(rt.db.n_rows))
+        config_before = len(rt.result.configuration)
+        result = rt.mint.retune(observed, rt.constraints,
+                                warm_start=rt.result)
+        built = 0
+        for spec in result.configuration:  # shadow build: not yet serving
+            if spec not in rt.store:
+                rt.store.get(spec)
+                built += 1
+        dropped = rt.swap(result, observed, now=now)
+        event = RetuneEvent(
+            t=now, drift=drift, generation=rt.cache.generation,
+            window=len(rt.monitor),
+            est_cost_before=float(stale_cost),
+            est_cost_after=float(result.est_workload_cost),
+            config_before=config_before,
+            config_after=len(result.configuration),
+            built=built, dropped=dropped,
+            tune_seconds=time.time() - t0)
+        self.events.append(event)
+        return event

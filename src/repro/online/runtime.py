@@ -1,0 +1,181 @@
+"""Online serving runtime (DESIGN.md §7): the layer between a request
+stream and the batched execution engine.
+
+Request path:  submit(query) → plan cache (miss: planner against the live
+configuration) → micro-batcher → flush (size/deadline) → plan-group
+compilation → ``BatchEngine`` kernels.
+
+Control path:  every tick the workload monitor's sliding window is checked
+for drift; the background re-tuner re-runs ``Mint.retune`` on the observed
+window, shadow-builds the winning configuration, and ``swap()`` atomically
+installs tuning result + plan-cache generation + pruned index store under
+the swap lock. Serving state (result, store, cache generation) is only
+ever read or replaced under that lock, so a flush sees either the old
+generation or the new one, never a mix.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from repro.core.types import Constraints, Query, QueryPlan, TuningResult, Workload
+from repro.index.registry import IndexStore
+from repro.online.monitor import (DriftDetector, WorkloadMonitor,
+                                  reference_histogram)
+from repro.online.plancache import PlanCache, constraints_fingerprint
+from repro.online.retuner import BackgroundRetuner, RetuneEvent
+from repro.online.scheduler import MicroBatcher, Ticket
+from repro.online.trace import TimedQuery
+from repro.serve.engine import BatchEngine
+
+
+@dataclass
+class RuntimeConfig:
+    max_batch: int = 32
+    max_delay_ms: float = 5.0
+    window: int = 256          # workload-monitor sliding window
+    min_window: int = 64       # queries required before drift can fire
+    drift_threshold: float = 0.35
+    cooldown_s: float = 60.0   # min spacing between retunes
+    retune_mode: str = "sync"  # "sync" | "thread"
+    measure: bool = False      # True: ExecutionMetrics per ticket (bench)
+
+
+class OnlineRuntime:
+    """Serving facade over (Mint, IndexStore, BatchEngine)."""
+
+    def __init__(self, db, mint, workload: Workload, constraints: Constraints,
+                 result: TuningResult | None = None,
+                 store: IndexStore | None = None,
+                 engine: BatchEngine | None = None,
+                 config: RuntimeConfig | None = None):
+        self.db = db
+        self.mint = mint
+        self.constraints = constraints
+        self.config = config or RuntimeConfig()
+        self.result = result if result is not None else mint.tune(workload, constraints)
+        self.store = store or IndexStore(db, seed=mint.seed)
+        self.engine = engine or BatchEngine(db, store=self.store)
+        if self.engine.store is not self.store:
+            self.engine.swap_store(self.store)
+        self.planner = mint.planner(constraints)
+        self.cache = PlanCache(constraints=constraints_fingerprint(constraints))
+        self.cache.seed(workload, self.result)
+        self.monitor = WorkloadMonitor(window=self.config.window)
+        self.detector = DriftDetector(reference_histogram(workload),
+                                      threshold=self.config.drift_threshold,
+                                      min_window=self.config.min_window)
+        self.retuner = BackgroundRetuner(self, cooldown_s=self.config.cooldown_s,
+                                         mode=self.config.retune_mode)
+        self.batcher = MicroBatcher(self._execute, self.plan_for,
+                                    max_batch=self.config.max_batch,
+                                    max_delay_ms=self.config.max_delay_ms)
+        self._swap_lock = threading.Lock()
+
+    # ---- request path -----------------------------------------------------
+
+    def plan_for(self, query: Query) -> QueryPlan:
+        """Plan-cache hot path; a miss pays one planner call against the
+        live configuration and templates the result for its (vid, k).
+        The (configuration, generation) pair is snapshotted together and
+        the template is only installed if no swap happened while planning —
+        otherwise a stale plan could be cached under the new generation."""
+        plan = self.cache.get(query)
+        if plan is None:
+            with self._swap_lock:
+                config = self.result.configuration
+                gen = self.cache.generation
+            plan = self.planner.plan(query, config)
+            with self._swap_lock:
+                if self.cache.generation == gen:
+                    self.cache.put(query, plan)
+        return plan
+
+    def submit(self, query: Query, now: float | None = None) -> Ticket:
+        now = time.time() if now is None else now
+        self.monitor.observe(query)
+        return self.batcher.submit(query, now)
+
+    def tick(self, now: float | None = None) -> list[Ticket]:
+        """Advance the serving loop: flush due micro-batches, then give the
+        background re-tuner a chance to react to drift."""
+        now = time.time() if now is None else now
+        done = self.batcher.poll(now)
+        self.retuner.maybe_retune(now)
+        return done
+
+    def drain(self, now: float | None = None) -> list[Ticket]:
+        return self.batcher.drain(now)
+
+    def run_trace(self, trace: list[TimedQuery]) -> list[Ticket]:
+        """Replay a timed trace in virtual time; returns one ticket per
+        query in arrival order (all completed)."""
+        tickets = [None] * len(trace)
+        for i, tq in enumerate(trace):
+            tickets[i] = self.submit(tq.query, tq.t)
+            self.tick(tq.t)
+        last = trace[-1].t if trace else 0.0
+        self.drain(last)
+        self.retuner.join()
+        return tickets  # type: ignore[return-value]
+
+    # ---- control path -----------------------------------------------------
+
+    def swap(self, result: TuningResult, observed: Workload,
+             now: float | None = None) -> int:
+        """Atomically install a re-tuned configuration: tuning result,
+        plan-cache generation (re-seeded from the new plans), drift
+        reference, and the index store pruned back to the new configuration
+        (the shadow-built indexes stay; stale ones are dropped so the
+        storage constraint holds after the swap, not just during it).
+        Returns the number of stale indexes dropped.
+
+        The batcher lock is held across drain + install: in-flight
+        requests complete under their admitted (old-generation) plans
+        BEFORE pruning — otherwise a pending ticket referencing a stale
+        index would transparently rebuild it after the drop — and no new
+        request can resolve an old-generation plan and enqueue it between
+        the drain and the generation bump. Lock order is batcher → swap
+        everywhere (submit resolves plans under the batcher lock and
+        plan_for takes only the swap lock), so this cannot deadlock."""
+        with self.batcher.lock:
+            self.batcher.drain(now)
+            with self._swap_lock:
+                self.result = result
+                self.cache.bump_generation()
+                self.cache.seed(observed, result)
+                self.detector.rearm(observed)
+                # prune mutates the engine's store in place (shadow-built
+                # indexes stay); engine.swap_store exists for replacing the
+                # store/column-store wholesale, e.g. after data mutations
+                dropped = len(self.store.prune(result.configuration))
+        return dropped
+
+    @property
+    def generation(self) -> int:
+        return self.cache.generation
+
+    @property
+    def retune_events(self) -> list[RetuneEvent]:
+        return self.retuner.events
+
+    def stats(self) -> dict:
+        return {
+            "generation": self.generation,
+            "plan_cache": self.cache.stats(),
+            "batcher": self.batcher.stats.as_dict(),
+            "dispatches": self.engine.counters.as_dict(),
+            "monitor": {"window": len(self.monitor),
+                        "total_observed": self.monitor.total_observed,
+                        "column_usage": self.monitor.column_usage()},
+            "drift": self.detector.check(self.monitor).drift,
+            "retunes": len(self.retuner.events),
+        }
+
+    # ---- execution --------------------------------------------------------
+
+    def _execute(self, pairs: list[tuple[Query, QueryPlan]]) -> list:
+        if self.config.measure:
+            return self.engine.execute_batch(pairs)
+        return self.engine.search_batch(pairs)

@@ -1,0 +1,144 @@
+"""Request queue + micro-batching scheduler (DESIGN.md §7).
+
+Single queries are admitted one at a time; the batcher holds them until a
+flush trigger fires — the queue reaching ``max_batch``, or the oldest
+pending request having waited ``max_delay_ms`` — then executes the whole
+micro-batch through the batched engine, which compiles it into plan groups
+(``serve.compiler.compile_batch``) so the MXU kernels always see real
+batches. Grouping happens per flushed batch; the scheduler's job is to
+*create* batches out of a request stream.
+
+Time is explicit (``now`` in seconds) so schedules are deterministic and
+simulation-driven; wall clock is used when ``now`` is omitted.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.types import Query, QueryPlan
+
+
+@dataclass
+class Ticket:
+    """One admitted request and, after its batch flushes, its result."""
+
+    query: Query
+    plan: QueryPlan
+    t_submit: float
+    t_done: float | None = None
+    ids: np.ndarray | None = None
+    metrics: object | None = None  # ExecutionMetrics when measuring
+    batch_size: int = 0            # size of the micro-batch it flushed in
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def wait_ms(self) -> float:
+        return ((self.t_done or self.t_submit) - self.t_submit) * 1e3
+
+
+@dataclass
+class BatcherStats:
+    batches: int = 0
+    queries: int = 0
+    flush_size: int = 0      # flushes triggered by the batch-size cap
+    flush_deadline: int = 0  # flushes triggered by the oldest-waiter deadline
+    flush_forced: int = 0    # explicit drains
+
+    @property
+    def mean_batch(self) -> float:
+        return self.queries / self.batches if self.batches else 0.0
+
+    def as_dict(self) -> dict:
+        return {"batches": self.batches, "queries": self.queries,
+                "mean_batch": self.mean_batch, "flush_size": self.flush_size,
+                "flush_deadline": self.flush_deadline,
+                "flush_forced": self.flush_forced}
+
+
+class MicroBatcher:
+    """Deadline/size-triggered micro-batching over an execute callback.
+
+    ``execute(pairs)`` runs a flushed batch and returns one result per pair
+    in order — ``BatchEngine.search_batch`` (ids) or ``execute_batch``
+    (metrics); results land on the tickets. ``plan_for(query)`` resolves the
+    plan at admission (the plan-cache hot path), so a generation swap
+    between submit and flush never mixes plans inside one batch entry.
+    """
+
+    def __init__(self, execute: Callable[[list[tuple[Query, QueryPlan]]], list],
+                 plan_for: Callable[[Query], QueryPlan],
+                 max_batch: int = 32, max_delay_ms: float = 5.0):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.execute = execute
+        self.plan_for = plan_for
+        self.max_batch = max_batch
+        self.max_delay_ms = max_delay_ms
+        self.stats = BatcherStats()
+        self._pending: list[Ticket] = []
+        # Serializes admission (plan resolution + enqueue, as one atomic
+        # step) and flush execution: a thread-mode retune swap holds this
+        # lock across drain + generation bump, so no request can resolve
+        # an old-generation plan and enqueue it after the swap's drain —
+        # and no ticket can flush twice or run the engine concurrently.
+        # Reentrant because the swap path calls drain() while holding it.
+        self.lock = threading.RLock()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, query: Query, now: float | None = None) -> Ticket:
+        now = time.time() if now is None else now
+        with self.lock:
+            ticket = Ticket(query=query, plan=self.plan_for(query),
+                            t_submit=now)
+            self._pending.append(ticket)
+            if len(self._pending) >= self.max_batch:
+                self._flush(now, "size")
+        return ticket
+
+    def poll(self, now: float | None = None) -> list[Ticket]:
+        """Flush iff the oldest pending request has exceeded the deadline;
+        returns the tickets completed by this call."""
+        now = time.time() if now is None else now
+        with self.lock:
+            if not self._pending:
+                return []
+            oldest = self._pending[0].t_submit
+            if (now - oldest) * 1e3 >= self.max_delay_ms:
+                return self._flush(now, "deadline")
+        return []
+
+    def drain(self, now: float | None = None) -> list[Ticket]:
+        """Force-flush whatever is pending (shutdown / end of trace)."""
+        now = time.time() if now is None else now
+        with self.lock:
+            if not self._pending:
+                return []
+            return self._flush(now, "forced")
+
+    def _flush(self, now: float, reason: str) -> list[Ticket]:
+        """Caller must hold ``self.lock``."""
+        batch, self._pending = self._pending, []
+        results = self.execute([(t.query, t.plan) for t in batch])
+        for ticket, res in zip(batch, results):
+            if hasattr(res, "ids"):  # ExecutionMetrics
+                ticket.metrics = res
+                ticket.ids = res.ids
+            else:
+                ticket.ids = res
+            ticket.t_done = now
+            ticket.batch_size = len(batch)
+        self.stats.batches += 1
+        self.stats.queries += len(batch)
+        setattr(self.stats, f"flush_{reason}",
+                getattr(self.stats, f"flush_{reason}") + 1)
+        return batch

@@ -1,0 +1,148 @@
+"""Scenario-diverse request traces for the online runtime (DESIGN.md §7).
+
+Each generator emits a list of ``TimedQuery`` — (arrival time, query) —
+with globally unique qids, at a fixed arrival rate (``qps``). Scenarios:
+
+  - ``steady``   : vids drawn from a reference workload's histogram — the
+                   distribution the configuration was tuned for;
+  - ``diurnal``  : the vid mixture shifts from a "day" workload to a
+                   "night" workload over the trace (traffic moving between
+                   modalities as the clock turns);
+  - ``burst``    : steady background traffic with a sudden burst window in
+                   which one vid (one modality) dominates arrivals;
+  - ``hot_item`` : queries concentrated around a few hot database rows
+                   (skewed item popularity — identical plan signatures,
+                   the plan cache's and micro-batcher's best case).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.types import Query, Vid, Workload, norm_vid
+from repro.data.vectors import MultiVectorDatabase, _normalize, _unit_noise
+
+
+@dataclass
+class TimedQuery:
+    t: float
+    query: Query
+
+
+class _QueryFactory:
+    """Builds near-manifold queries (a database row + per-column noise)
+    with a monotonically increasing qid."""
+
+    def __init__(self, db: MultiVectorDatabase, k: int, seed: int,
+                 noise: float = 0.5, qid_start: int = 0):
+        self.db = db
+        self.k = k
+        self.noise = noise
+        self.rng = np.random.default_rng(seed)
+        self._qids = itertools.count(qid_start)
+
+    def make(self, vid: Vid, row: int | None = None) -> Query:
+        vid = norm_vid(vid)
+        row = int(self.rng.integers(0, self.db.n_rows)) if row is None else row
+        vecs = {}
+        for c in vid:
+            base = self.db.columns[c][row]
+            vecs[c] = _normalize(base + _unit_noise(self.rng, base.shape,
+                                                    self.noise))
+        return Query(qid=next(self._qids), vid=vid, vectors=vecs, k=self.k)
+
+
+def _workload_vids(workload: Workload) -> tuple[list[Vid], np.ndarray]:
+    vids = sorted({q.vid for q in workload.queries})
+    mass = np.zeros(len(vids))
+    for q, p in workload:
+        mass[vids.index(q.vid)] += p
+    return vids, mass / mass.sum()
+
+
+def steady_trace(db: MultiVectorDatabase, workload: Workload, n: int,
+                 qps: float = 200.0, k: int | None = None, seed: int = 0,
+                 t0: float = 0.0, qid_start: int = 0) -> list[TimedQuery]:
+    vids, probs = _workload_vids(workload)
+    k = k if k is not None else workload.queries[0].k
+    fac = _QueryFactory(db, k, seed, qid_start=qid_start)
+    out = []
+    for i in range(n):
+        vid = vids[int(fac.rng.choice(len(vids), p=probs))]
+        out.append(TimedQuery(t=t0 + i / qps, query=fac.make(vid)))
+    return out
+
+
+def diurnal_trace(db: MultiVectorDatabase, day: Workload, night: Workload,
+                  n: int, qps: float = 200.0, k: int | None = None,
+                  seed: int = 0, t0: float = 0.0,
+                  qid_start: int = 0) -> list[TimedQuery]:
+    """Linear day→night mixture shift: query i draws from the night
+    histogram with probability i/(n-1)."""
+    day_vids, day_p = _workload_vids(day)
+    night_vids, night_p = _workload_vids(night)
+    k = k if k is not None else day.queries[0].k
+    fac = _QueryFactory(db, k, seed, qid_start=qid_start)
+    out = []
+    for i in range(n):
+        phase = i / max(n - 1, 1)
+        if fac.rng.random() < phase:
+            vid = night_vids[int(fac.rng.choice(len(night_vids), p=night_p))]
+        else:
+            vid = day_vids[int(fac.rng.choice(len(day_vids), p=day_p))]
+        out.append(TimedQuery(t=t0 + i / qps, query=fac.make(vid)))
+    return out
+
+
+def burst_trace(db: MultiVectorDatabase, workload: Workload, burst_vid: Vid,
+                n: int, qps: float = 200.0, burst_start: float = 0.4,
+                burst_len: float = 0.3, burst_qps_mult: float = 4.0,
+                k: int | None = None, seed: int = 0, t0: float = 0.0,
+                qid_start: int = 0) -> list[TimedQuery]:
+    """Steady traffic plus a modality burst: inside the burst window
+    arrivals speed up by ``burst_qps_mult`` and all hit ``burst_vid``."""
+    vids, probs = _workload_vids(workload)
+    burst_vid = norm_vid(burst_vid)
+    k = k if k is not None else workload.queries[0].k
+    fac = _QueryFactory(db, k, seed, qid_start=qid_start)
+    lo, hi = int(n * burst_start), int(n * (burst_start + burst_len))
+    out = []
+    t = t0
+    for i in range(n):
+        in_burst = lo <= i < hi
+        if in_burst:
+            vid = burst_vid
+            t += 1.0 / (qps * burst_qps_mult)
+        else:
+            vid = vids[int(fac.rng.choice(len(vids), p=probs))]
+            t += 1.0 / qps
+        out.append(TimedQuery(t=t, query=fac.make(vid)))
+    return out
+
+
+def hot_item_trace(db: MultiVectorDatabase, vid: Vid, n: int,
+                   qps: float = 200.0, n_hot: int = 4, p_hot: float = 0.85,
+                   k: int = 10, seed: int = 0, t0: float = 0.0,
+                   qid_start: int = 0) -> list[TimedQuery]:
+    """Hot-item skew: with probability ``p_hot`` a query lands near one of
+    ``n_hot`` popular rows; the rest are uniform."""
+    vid = norm_vid(vid)
+    fac = _QueryFactory(db, k, seed, qid_start=qid_start)
+    hot_rows = fac.rng.choice(db.n_rows, size=n_hot, replace=False)
+    out = []
+    for i in range(n):
+        row = (int(fac.rng.choice(hot_rows)) if fac.rng.random() < p_hot
+               else None)
+        out.append(TimedQuery(t=t0 + i / qps, query=fac.make(vid, row=row)))
+    return out
+
+
+def make_trace(db: MultiVectorDatabase, scenario: str, **kw) -> list[TimedQuery]:
+    gens = {"steady": steady_trace, "diurnal": diurnal_trace,
+            "burst": burst_trace, "hot_item": hot_item_trace}
+    if scenario not in gens:
+        raise ValueError(f"unknown scenario {scenario!r}; "
+                         f"choose from {sorted(gens)}")
+    return gens[scenario](db, **kw)

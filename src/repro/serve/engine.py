@@ -93,6 +93,16 @@ class BatchEngine:
 
     # ---- public API -------------------------------------------------------
 
+    def swap_store(self, store, cstore: ColumnStore | None = None) -> None:
+        """Swap hook for the online runtime's drift → retune → swap
+        lifecycle: replace the index store (and optionally the column
+        store, when the underlying database itself changed). Cached
+        distributed search steps are keyed by shape only, so they survive
+        a store swap; the column store is reused unless replaced."""
+        self.store = store
+        if cstore is not None:
+            self.cstore = cstore
+
     def search_batch(self, pairs: list[tuple[Query, QueryPlan]]) -> list[np.ndarray]:
         """Serving form: top-k ids per query, in batch order."""
         out: list[np.ndarray | None] = [None] * len(pairs)

@@ -23,6 +23,7 @@ def _batch(cfg, key, B=2, S=48, frames_len=32):
     return batch
 
 
+@pytest.mark.slow  # jit-compiles every arch; fast lane keeps the shapes table
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):
     cfg = get_arch(arch).reduced()
@@ -41,6 +42,7 @@ def test_train_step_smoke(arch):
     assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_decode_parity(arch):
     """decode_step at position S must match prefill logits of S+1 tokens."""

@@ -18,6 +18,7 @@ def _rand(key, shape, dtype):
     return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
 
 
+@pytest.mark.slow  # interpret-mode grid sweep; fast lane keeps fused_scan smoke
 @pytest.mark.parametrize("B,N,d", [(4, 64, 32), (17, 130, 100), (128, 512, 128),
                                    (3, 1000, 25)])
 @pytest.mark.parametrize("metric", ["dot", "cosine", "l2"])
@@ -31,6 +32,7 @@ def test_distance_kernel_matches_ref(B, N, d, metric, dtype):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,N,k", [(4, 200, 10), (9, 1000, 50), (2, 64, 64),
                                    (1, 5000, 100)])
 def test_topk_kernel_matches_ref(B, N, k):
@@ -53,6 +55,7 @@ def test_fused_scan_matches_exact():
     np.testing.assert_allclose(np.asarray(vals), ref_vals, rtol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,Hq,Hkv,Sq,Skv,d", [
     (1, 2, 2, 64, 64, 32),     # MHA square
     (2, 4, 2, 32, 96, 64),     # GQA, decode-ish (Sq < Skv)
@@ -68,6 +71,7 @@ def test_flash_attention_matches_ref(B, Hq, Hkv, Sq, Skv, d, causal):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("window", [0, 16])
 @pytest.mark.parametrize("softcap", [0.0, 20.0])
 def test_flash_attention_window_softcap(window, softcap):

@@ -1,0 +1,347 @@
+"""Online serving runtime tests: plan cache, micro-batching scheduler,
+workload monitor / drift detector, and the retune → shadow-build → swap
+lifecycle — including the acceptance property that scheduler micro-batches
+are bit-identical to per-query ``core.tuner.execute_plan`` execution."""
+import numpy as np
+import pytest
+
+from repro.core.tuner import Mint, execute_plan
+from repro.core.types import Constraints, IndexSpec, Query, QueryPlan, Workload
+from repro.data.vectors import make_database, make_queries
+from repro.index.registry import IndexStore
+from repro.online import (DriftDetector, MicroBatcher, OnlineRuntime,
+                          PlanCache, RuntimeConfig, WorkloadMonitor,
+                          diurnal_trace, make_trace, reference_histogram,
+                          steady_trace, total_variation)
+from repro.online.trace import hot_item_trace
+
+K = 10
+DAY_VIDS = [(0,), (0, 1), (1,)]
+NIGHT_VIDS = [(2,), (2, 3), (3,)]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(1500, [("a", 24), ("b", 32), ("c", 28), ("d", 20)],
+                         seed=0)
+
+
+def _workload(db, vids, seed=0):
+    qs = make_queries(db, vids, k=K, seed=seed)
+    return Workload(queries=qs, probs=np.ones(len(qs)))
+
+
+@pytest.fixture(scope="module")
+def day(db):
+    return _workload(db, DAY_VIDS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def night(db):
+    return _workload(db, NIGHT_VIDS, seed=1)
+
+
+@pytest.fixture(scope="module")
+def mint(db):
+    return Mint(db, index_kind="ivf", seed=0, min_sample_rows=400)
+
+
+@pytest.fixture(scope="module")
+def cons():
+    return Constraints(theta_recall=0.85, theta_storage=3)
+
+
+@pytest.fixture(scope="module")
+def tuned(mint, day, cons):
+    return mint.tune(day, cons)
+
+
+def _runtime(db, mint, day, cons, tuned, **cfg_kw) -> OnlineRuntime:
+    kw = dict(max_batch=4, max_delay_ms=5.0, window=32, min_window=16,
+              drift_threshold=0.35, cooldown_s=0.01)
+    kw.update(cfg_kw)
+    return OnlineRuntime(db, mint, day, cons, result=tuned,
+                         store=IndexStore(db, seed=0),
+                         config=RuntimeConfig(**kw))
+
+
+# ---- plan cache -----------------------------------------------------------
+
+
+def test_plan_cache_hit_miss_and_generation(db, day, tuned):
+    cache = PlanCache()
+    assert cache.seed(day, tuned) == len({q.vid for q in day.queries})
+    q = make_queries(db, [DAY_VIDS[0]], k=K, seed=9)[0]
+    hit = cache.get(q)  # same (vid, k) as a seeded template
+    assert hit is not None and hit.query_qid == q.qid
+    assert hit.indexes == tuned.plans[day.queries[0].qid].indexes
+
+    unseen = make_queries(db, [(2, 3)], k=K, seed=9)[0]
+    assert cache.get(unseen) is None  # miss: vid never templated
+    plan = QueryPlan(unseen.qid, [IndexSpec(vid=(2,), kind="ivf")], [32],
+                     1.0, 1.0)
+    cache.put(unseen, plan)
+    assert cache.get(unseen).eks == [32]
+    assert cache.hits == 2 and cache.misses == 1
+    assert cache.hit_rate == pytest.approx(2 / 3)
+
+    gen = cache.bump_generation()
+    assert gen == 1 and len(cache) == 0  # old generation unreachable
+    assert cache.get(q) is None  # post-swap: must re-plan / re-seed
+
+
+def test_plan_cache_keys_on_k(db, day, tuned):
+    cache = PlanCache()
+    cache.seed(day, tuned)
+    other_k = make_queries(db, [DAY_VIDS[0]], k=K, seed=3)[0]
+    other_k.k = K + 5
+    assert cache.get(other_k) is None  # eks depend on k: no cross-k reuse
+
+
+# ---- micro-batcher --------------------------------------------------------
+
+
+def _stub_batcher(max_batch=3, max_delay_ms=10.0):
+    flushed = []
+
+    def execute(pairs):
+        flushed.append(len(pairs))
+        return [np.asarray([i]) for i in range(len(pairs))]
+
+    def plan_for(q):
+        return QueryPlan(q.qid, [], [], 0.0, 1.0)
+
+    return MicroBatcher(execute, plan_for, max_batch=max_batch,
+                        max_delay_ms=max_delay_ms), flushed
+
+
+def _q(db, qid, vid=(0,)):
+    q = make_queries(db, [vid], k=K, seed=qid)[0]
+    q.qid = qid
+    return q
+
+
+def test_batcher_size_trigger(db):
+    mb, flushed = _stub_batcher(max_batch=3)
+    t1 = mb.submit(_q(db, 1), now=0.0)
+    t2 = mb.submit(_q(db, 2), now=0.001)
+    assert not t1.done and len(mb) == 2
+    t3 = mb.submit(_q(db, 3), now=0.002)  # hits the cap -> flush
+    assert t1.done and t2.done and t3.done
+    assert flushed == [3] and t1.batch_size == 3
+    assert mb.stats.flush_size == 1 and mb.stats.flush_deadline == 0
+
+
+def test_batcher_deadline_trigger_and_drain(db):
+    mb, flushed = _stub_batcher(max_batch=100, max_delay_ms=5.0)
+    t1 = mb.submit(_q(db, 1), now=0.0)
+    assert mb.poll(now=0.004) == []  # oldest has waited < 5ms
+    assert not t1.done
+    done = mb.poll(now=0.0051)
+    assert [t.query.qid for t in done] == [1] and t1.done
+    assert t1.wait_ms == pytest.approx(5.1)
+    mb.submit(_q(db, 2), now=0.01)
+    assert [t.query.qid for t in mb.drain(now=0.011)] == [2]
+    assert mb.stats.as_dict()["flush_deadline"] == 1
+    assert mb.stats.flush_forced == 1 and flushed == [1, 1]
+
+
+# ---- acceptance: micro-batched results == per-query execute_plan ----------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_scheduler_batches_bit_identical_to_execute_plan(db, mint, day, cons,
+                                                         tuned, seed):
+    """Property (acceptance): for randomized request streams — random vid
+    mixes, stream lengths, and batcher size caps, so every flush-trigger
+    path and group shape is exercised — the scheduler's micro-batched
+    results are exactly the ids per-query ``core.tuner.execute_plan``
+    produces for the same plan. (Randomized-sweep form via seeded rng;
+    hypothesis is not available in the container.)"""
+    rt = _runtime(db, mint, day, cons, tuned, drift_threshold=2.0)
+    all_vids = DAY_VIDS + NIGHT_VIDS + [(0, 2), (1, 3), (0, 1, 2, 3)]
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 13))
+    max_batch = int(rng.integers(1, 6))
+    vids = [all_vids[i] for i in rng.integers(0, len(all_vids), size=n)]
+    queries = make_queries(db, vids, k=K, seed=seed)
+    for i, q in enumerate(queries):
+        q.qid = 100_000 + seed * 100 + i  # unique across examples
+    rt.batcher.max_batch = max_batch
+    tickets = []
+    for i, q in enumerate(queries):
+        tickets.append(rt.submit(q, now=float(i) * 1e-4))
+        rt.tick(now=float(i) * 1e-4)
+    rt.drain(now=1.0)
+    for t in tickets:
+        assert t.done
+        ref = execute_plan(db, rt.store, t.query, t.plan)
+        np.testing.assert_array_equal(np.asarray(t.ids), np.asarray(ref.ids))
+
+
+# ---- monitor / drift ------------------------------------------------------
+
+
+def test_monitor_histogram_and_observed_workload(db):
+    mon = WorkloadMonitor(window=8)
+    for i in range(6):
+        mon.observe(_q(db, i, vid=(0,)))
+    for i in range(6, 8):
+        mon.observe(_q(db, i, vid=(1, 2)))
+    assert len(mon) == 8 and mon.total_observed == 8
+    hist = mon.histogram()
+    assert hist[(0,)] == pytest.approx(6 / 8)
+    assert hist[(1, 2)] == pytest.approx(2 / 8)
+    assert mon.column_usage() == {0: 6 / 8, 1: 2 / 8, 2: 2 / 8}
+    wl = mon.observed_workload(reps_per_vid=2)
+    # per-vid mass proportional to window counts
+    mass = {}
+    for q, p in wl:
+        mass[q.vid] = mass.get(q.vid, 0.0) + p
+    assert mass[(0,)] == pytest.approx(0.75)
+    assert mass[(1, 2)] == pytest.approx(0.25)
+    # sliding: 8 more queries of a new vid evict everything else
+    for i in range(8, 16):
+        mon.observe(_q(db, i, vid=(3,)))
+    assert mon.histogram() == {(3,): 1.0}
+
+
+def test_drift_detector_steady_vs_drifted(db, day):
+    ref = reference_histogram(day)
+    det = DriftDetector(ref, threshold=0.35, min_window=8)
+    mon = WorkloadMonitor(window=16)
+    for i, q in enumerate(steady_trace(db, day, n=16, seed=2)):
+        mon.observe(q.query)
+    steady = det.check(mon)
+    assert not steady.drifted and steady.drift < 0.35
+    for i in range(16):  # night traffic floods the window
+        mon.observe(_q(db, 100 + i, vid=(2, 3)))
+    drifted = det.check(mon)
+    assert drifted.drifted and drifted.drift == pytest.approx(1.0)
+    assert total_variation(ref, ref) == 0.0
+
+
+def test_drift_detector_gated_by_min_window(db, day):
+    det = DriftDetector(reference_histogram(day), threshold=0.35,
+                        min_window=32)
+    mon = WorkloadMonitor(window=64)
+    for i in range(8):
+        mon.observe(_q(db, i, vid=(2, 3)))
+    report = det.check(mon)
+    assert report.drift == pytest.approx(1.0) and not report.drifted
+
+
+# ---- retune → swap lifecycle ---------------------------------------------
+
+
+def test_retune_swap_lifecycle(db, mint, day, night, cons, tuned):
+    rt = _runtime(db, mint, day, cons, tuned, measure=True)
+    assert rt.generation == 0
+    steady = steady_trace(db, day, n=12, qps=1000.0, seed=3)
+    rt.run_trace(steady)
+    assert rt.retune_events == []  # no drift yet
+
+    trace = steady_trace(db, night, n=48, qps=1000.0, seed=4, t0=1.0,
+                         qid_start=10_000)
+    tickets = rt.run_trace(trace)
+    assert len(rt.retune_events) >= 1
+    ev = rt.retune_events[0]
+    assert rt.generation >= 1 and ev.generation == 1
+    assert ev.drift >= 0.35 and ev.built >= 1
+    # the store was pruned back to the serving configuration (shadow
+    # indexes kept, stale ones dropped): storage constraint still holds
+    assert set(rt.store.built_specs()) <= set(rt.result.configuration)
+    assert len(rt.store.built_specs()) <= cons.theta_storage
+    # the re-tuned configuration actually serves the night vids
+    covered = {x.vid for x in rt.result.configuration}
+    assert covered & {(2,), (3,), (2, 3)}
+    # post-swap tickets still bit-identical to per-query execution
+    for t in tickets[-8:]:
+        ref = execute_plan(db, rt.store, t.query, t.plan)
+        np.testing.assert_array_equal(np.asarray(t.ids), np.asarray(ref.ids))
+        assert t.metrics.cost == ref.cost
+    # recall constraint met on the post-swap tail
+    assert np.mean([t.metrics.recall for t in tickets[-8:]]) >= cons.theta_recall
+    # and cheaper than the stale flat-scan fallback would have been
+    flat_cost = np.mean([t.query.dim() * db.n_rows for t in tickets[-8:]])
+    assert np.mean([t.metrics.cost for t in tickets[-8:]]) < flat_cost
+
+
+def test_retune_thread_mode(db, mint, day, night, cons, tuned):
+    rt = _runtime(db, mint, day, cons, tuned, retune_mode="thread")
+    trace = steady_trace(db, night, n=40, qps=1000.0, seed=5, qid_start=20_000)
+    rt.run_trace(trace)  # joins the worker before returning
+    assert not rt.retuner.inflight
+    assert len(rt.retune_events) >= 1
+    assert rt.generation >= 1
+
+
+def test_mint_retune_warm_start(db, mint, night, cons, tuned):
+    result = mint.retune(night, cons, warm_start=tuned)
+    assert result.configuration  # found a feasible config for the night mix
+    assert result.trace[-1]["warm_start"] is True
+    assert result.storage <= cons.theta_storage
+    covered = {x.vid for x in result.configuration}
+    assert covered & {(2,), (3,), (2, 3)}
+
+
+# ---- layer hooks ----------------------------------------------------------
+
+
+def test_index_store_drop_and_prune(db):
+    store = IndexStore(db, seed=0)
+    a = IndexSpec(vid=(0,), kind="ivf")
+    b = IndexSpec(vid=(1,), kind="ivf")
+    store.get(a)
+    store.get(b)
+    assert store.drop(a) and not store.drop(a)  # second drop is a no-op
+    store.get(a)
+    dropped = store.prune([b])
+    assert dropped == [a] and store.built_specs() == [b]
+
+
+def test_engine_swap_store_serves_identically(db, mint, day, cons, tuned):
+    from repro.serve.engine import BatchEngine
+    q = day.queries[0]
+    plan = tuned.plans[q.qid]
+    engine = BatchEngine(db, store=IndexStore(db, seed=0))
+    [ids_before] = engine.search_batch([(q, plan)])
+    engine.swap_store(IndexStore(db, seed=0))
+    [ids_after] = engine.search_batch([(q, plan)])
+    np.testing.assert_array_equal(np.asarray(ids_before),
+                                  np.asarray(ids_after))
+
+
+# ---- trace generators -----------------------------------------------------
+
+
+def test_trace_generators_structure(db, day, night):
+    n = 24
+    for scenario, kw in [
+            ("steady", dict(workload=day, n=n)),
+            ("diurnal", dict(day=day, night=night, n=n)),
+            ("burst", dict(workload=day, burst_vid=(2,), n=n)),
+            ("hot_item", dict(vid=(0, 1), n=n))]:
+        trace = make_trace(db, scenario, qps=500.0, seed=7, **kw)
+        assert len(trace) == n
+        ts = [tq.t for tq in trace]
+        assert all(b >= a for a, b in zip(ts, ts[1:]))  # arrivals ordered
+        qids = [tq.query.qid for tq in trace]
+        assert len(set(qids)) == n  # globally unique qids
+    with pytest.raises(ValueError):
+        make_trace(db, "nope")
+
+
+def test_diurnal_trace_shifts_distribution(db, day, night):
+    trace = diurnal_trace(db, day, night, n=200, seed=8)
+    day_set, night_set = set(DAY_VIDS), set(NIGHT_VIDS)
+    head = [tq.query.vid for tq in trace[:50]]
+    tail = [tq.query.vid for tq in trace[-50:]]
+    assert sum(v in day_set for v in head) > 35   # early: mostly day
+    assert sum(v in night_set for v in tail) > 35  # late: mostly night
+
+
+def test_hot_item_trace_concentrates_signatures(db):
+    trace = hot_item_trace(db, vid=(0, 1), n=40, n_hot=2, p_hot=1.0, seed=9)
+    assert {tq.query.vid for tq in trace} == {(0, 1)}  # one plan signature

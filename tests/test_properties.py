@@ -2,6 +2,9 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # hypothesis sweeps; fast-lane property
+                               # coverage lives in tests/test_online.py
+
 pytest.importorskip("hypothesis", reason="hypothesis not installed (dev dep)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 

@@ -110,6 +110,74 @@ def test_compiler_filters_ek_zero(db):
     assert [item.eks for item in group.items] == [[50]]
 
 
+def test_compile_empty_batch():
+    """Empty request batch: no groups, zero dispatches either way."""
+    assert compile_batch([]) == []
+    stats = dispatch_plan([])
+    assert stats == {"queries": 0, "groups": 0,
+                     "batched_scan_dispatches": 0,
+                     "per_query_scan_dispatches": 0}
+
+
+def test_compile_all_ek_zero_plan_is_fallback_group(db, store):
+    """A plan whose every index is filtered at ek==0 lands in the empty-
+    signature flat-scan fallback group — one batched dispatch, and the
+    engine's output matches the per-query fallback exactly."""
+    spec = IndexSpec(vid=(0,), kind="ivf")
+    q = make_queries(db, [(0, 1)], k=K, seed=3)[0]
+    plan = QueryPlan(q.qid, [spec], [40], 0.0, 1.0)
+    plan.eks = [0]  # mutate post-init: everything filtered at compile time
+    [group] = compile_batch([(q, plan)])
+    assert group.specs == [] and group.key.signature == ()
+    assert not group.single_exact
+    stats = dispatch_plan([group])
+    assert stats["batched_scan_dispatches"] == 1
+    assert stats["per_query_scan_dispatches"] == 1  # the flat-scan fallback
+    engine = BatchEngine(db, store=store)
+    [got] = engine.search_batch([(q, plan)])
+    ref = execute_plan(db, store, q, plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.ids))
+
+
+def test_compile_graph_only_fallback_group(db):
+    """Graph kinds can't batch their walks: dispatch accounting charges one
+    search per query with a store, but one flat scan for a storeless
+    engine (batchable=None)."""
+    spec = IndexSpec(vid=(0,), kind="hnsw")
+    qs = make_queries(db, [(0, 1)] * 3, k=K, seed=4)
+    pairs = [(q, QueryPlan(q.qid, [spec], [40], 0.0, 1.0)) for q in qs]
+    groups = compile_batch(pairs)
+    assert len(groups) == 1 and groups[0].batch == 3
+    stats = dispatch_plan(groups)
+    assert stats["batched_scan_dispatches"] == 3   # per-query graph walks
+    storeless = dispatch_plan(groups, batchable=None)
+    assert storeless["batched_scan_dispatches"] == 1  # served as flat scan
+
+
+def test_ek_bucket_power_of_two_boundaries():
+    """Exact power-of-two eks stay at their own bucket; one past the
+    boundary doubles it."""
+    for p in (16, 32, 64, 1024):
+        assert ek_bucket(p) == p
+        assert ek_bucket(p - 1) == p
+        assert ek_bucket(p + 1) == 2 * p
+
+
+def test_compiler_groups_split_exactly_at_bucket_boundary(db):
+    """ek=16 vs ek=17 straddle a bucket edge (different groups); ek=17 and
+    ek=32 share bucket 32 (same group) but keep their exact per-query eks."""
+    spec = IndexSpec(vid=(0,), kind="ivf")
+    qs = make_queries(db, [(0,)] * 3, k=K, seed=5)
+    eks = [16, 17, 32]
+    pairs = [(q, QueryPlan(q.qid, [spec], [ek], 0.0, 1.0))
+             for q, ek in zip(qs, eks)]
+    groups = compile_batch(pairs)
+    assert sorted(g.batch for g in groups) == [1, 2]
+    big = next(g for g in groups if g.batch == 2)
+    assert big.buckets == [32]
+    assert [item.eks for item in big.items] == [[17], [32]]
+
+
 # ---- batched engine: identity with the per-query paths --------------------
 
 
