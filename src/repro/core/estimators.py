@@ -24,7 +24,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.types import IndexSpec, Vid, norm_vid
+from repro.core.types import IndexSpec
 from repro.data.vectors import MultiVectorDatabase, make_queries
 from repro.index.base import exact_topk
 from repro.index.registry import BUILDERS

@@ -28,7 +28,6 @@ import numpy as np
 from repro.core.estimators import EstimatorBundle
 from repro.core.types import IndexSpec, Query, QueryPlan, Vid
 from repro.data.vectors import MultiVectorDatabase
-from repro.index.base import exact_topk
 
 
 # --------------------------------------------------------------------------

@@ -14,11 +14,11 @@ Plan caching (paper Section 4.2): plans are cached keyed by
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import numpy as np
 
 from repro.core.estimators import StorageEstimator
 from repro.core.planner import QueryPlanner
@@ -111,6 +111,39 @@ class ConfigurationSearcher:
         for plan in plans.values():
             used.update(plan.indexes)
         return frozenset(x for x in config if x in used)
+
+    def search_at_budget(self, theta_storage: float,
+                         warm: frozenset | None = None) -> TuningResult:
+        """Re-run the beam search under a different storage budget, reusing
+        this searcher's what-if plan cache — plans are keyed by (qid, useful
+        indexes), which is budget-independent, so walking a budget LADDER
+        (the joint cross-tenant tuner's inner loop) pays the planner only
+        for configurations no previous rung explored. ``warm`` (typically
+        the previous rung's configuration) is added to the seed set."""
+        saved = self.constraints
+        saved_seeds = list(self.extra_seeds)
+        self.constraints = dataclasses.replace(saved,
+                                               theta_storage=theta_storage)
+        if warm:
+            self.extra_seeds.append(frozenset(warm))
+        try:
+            return self.search()
+        finally:  # rung-local: budget AND warm seed must not leak out
+            self.constraints = saved
+            self.extra_seeds = saved_seeds
+
+    def is_feasible(self, result: TuningResult,
+                    theta_storage: float | None = None) -> bool:
+        """Recall + storage feasibility of a finished result (the searcher
+        returns the best INFEASIBLE configuration when nothing feasible
+        exists, so ladder consumers must check). ``theta_storage`` overrides
+        the searcher's own budget (ladder rungs differ per call)."""
+        budget = (self.constraints.theta_storage if theta_storage is None
+                  else theta_storage)
+        if result.storage > budget + 1e-9:
+            return False
+        return all(p.est_recall >= self.constraints.theta_recall - 1e-9
+                   for p in result.plans.values())
 
     # ---- Algorithm 3 main loop ----
     def search(self) -> TuningResult:

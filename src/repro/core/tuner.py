@@ -9,16 +9,16 @@ against full-database ground truth.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.core.estimators import (EstimatorBundle, StorageEstimator,
                                    train_estimators)
-from repro.core.planner import QueryPlanner, WhatIfContext
+from repro.core.planner import QueryPlanner
 from repro.core.searcher import BeamSearchParams, ConfigurationSearcher
 from repro.core.types import (Constraints, IndexSpec, Query, QueryPlan,
-                              TuningResult, Workload)
+                              TenantId, TuningResult, Workload)
 from repro.data.vectors import MultiVectorDatabase
 from repro.index.base import exact_topk
 from repro.index.registry import IndexStore
@@ -106,6 +106,169 @@ class Mint:
         storage = StorageEstimator(self.db.n_rows, constraints.storage_mode).storage(config)
         return TuningResult(configuration=config, plans=plans,
                             est_workload_cost=cost, storage=storage)
+
+
+# --------------------------------------------------------------------------
+# Joint cross-tenant tuning: one storage budget, many workloads
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TenantTask:
+    """One tenant's tuning inputs for ``tune_tenants``. ``constraints``
+    carries the tenant's recall target and storage mode; its
+    ``theta_storage`` acts as a per-tenant CAP on what the allocator may
+    hand this tenant (<= the global budget). ``weight`` is the tenant's
+    traffic share in the aggregate objective."""
+
+    mint: Mint
+    workload: Workload
+    constraints: Constraints
+    weight: float = 1.0
+    warm_start: TuningResult | None = None
+
+
+@dataclass
+class JointTuningResult:
+    """Per-tenant allocations + tuning results under one global budget."""
+
+    allocations: dict[TenantId, int]          # storage units per tenant
+    results: dict[TenantId, TuningResult]
+    total_cost: float                         # Σ weight · est_workload_cost
+    total_storage: float
+    feasible: bool                            # every tenant recall-feasible
+    curves: dict[TenantId, dict[int, float]]  # budget -> est cost (inf = infeasible)
+    trace: list[dict] = field(default_factory=list)
+
+    def describe(self) -> str:
+        lines = [f"joint tuning: total_cost={self.total_cost:.1f} "
+                 f"storage={self.total_storage} feasible={self.feasible}"]
+        for t in sorted(self.allocations):
+            r = self.results[t]
+            lines.append(f"  {t}: budget={self.allocations[t]} "
+                         f"cost={r.est_workload_cost:.1f} "
+                         f"|config|={len(r.configuration)}")
+        return "\n".join(lines)
+
+
+def tune_tenants(tenants: dict[TenantId, TenantTask], global_storage: int,
+                 params: BeamSearchParams | None = None,
+                 equal_split: bool = False) -> JointTuningResult:
+    """Split one global storage budget across tenants (paper constraint (3)
+    applied to a SHARED device): per tenant, walk a budget ladder with the
+    beam search — each rung warm-started from the previous rung's winner
+    via ``ConfigurationSearcher(extra_seeds=...)``, what-if plan cache
+    shared across rungs — then allocate units by GREEDY KNAPSACK on the
+    marginal cost drop: every tenant starts at its cheapest feasible rung
+    and each remaining unit goes to the tenant whose next rung buys the
+    largest weighted cost reduction. ``equal_split=True`` skips the greedy
+    step and gives every tenant ``global_storage // n`` units (the baseline
+    the tenant benchmark compares against).
+
+    Budgets are in the tenants' storage units ("count" mode: number of
+    indexes). Tenants whose minimum feasible rung cannot fit the remaining
+    budget are still assigned their best rung; the result's ``feasible``
+    flag reports whether every tenant met recall within its allocation."""
+    if not tenants:
+        raise ValueError("tune_tenants needs at least one tenant")
+    budget = int(global_storage)
+    if budget < len(tenants):
+        raise ValueError(f"global storage {budget} cannot give each of "
+                         f"{len(tenants)} tenants one unit")
+
+    curves: dict[TenantId, dict[int, float]] = {}
+    ladders: dict[TenantId, dict[int, TuningResult]] = {}
+    caps: dict[TenantId, int] = {}
+    trace: list[dict] = []
+    for name, task in sorted(tenants.items()):
+        # per-tenant copy with the kind the tenant's estimators were trained
+        # on (same guard as Mint.tune) — tenants may use different kinds
+        p = replace(params or BeamSearchParams(),
+                    index_kind=task.mint.index_kind)
+        planner = task.mint.planner(task.constraints)
+        seeds = ([frozenset(task.warm_start.configuration)]
+                 if task.warm_start is not None
+                 and task.warm_start.configuration else [])
+        searcher = ConfigurationSearcher(planner, task.workload,
+                                         task.constraints, p,
+                                         extra_seeds=seeds)
+        cap = min(budget, int(task.constraints.theta_storage))
+        caps[name] = max(cap, 1)
+        curve: dict[int, float] = {}
+        ladder: dict[int, TuningResult] = {}
+        prev: frozenset | None = None
+        for b in range(1, caps[name] + 1):
+            result = searcher.search_at_budget(float(b), warm=prev)
+            ladder[b] = result
+            feasible = searcher.is_feasible(result, theta_storage=float(b))
+            curve[b] = result.est_workload_cost if feasible else float("inf")
+            prev = result.configuration or prev
+        # the ladder is monotone in principle (more budget never hurts) but
+        # the beam is heuristic — enforce it so greedy gains are >= 0
+        for b in range(2, caps[name] + 1):
+            if curve[b] > curve[b - 1]:
+                curve[b], ladder[b] = curve[b - 1], ladder[b - 1]
+        curves[name] = curve
+        ladders[name] = ladder
+        trace.append({"tenant": name, "cap": caps[name],
+                      "what_if_calls": searcher.what_if_calls,
+                      "cache_hits": searcher.cache_hits})
+
+    names = sorted(tenants)
+    if equal_split:
+        share = budget // len(names)
+        extra = budget - share * len(names)
+        alloc = {}
+        for i, name in enumerate(names):
+            alloc[name] = min(max(share + (1 if i < extra else 0), 1),
+                              caps[name])
+    else:
+        # start every tenant at its cheapest FEASIBLE rung (or rung 1)
+        alloc = {}
+        for name in names:
+            feas = [b for b, c in curves[name].items() if np.isfinite(c)]
+            alloc[name] = min(feas) if feas else 1
+        # if the cheapest-feasible starts overflow the budget, walk back the
+        # least-damaging rungs until the global constraint holds (the
+        # squeezed tenants' infeasibility is reported via ``feasible``)
+        while sum(alloc.values()) > budget:
+            def pain(n: TenantId) -> float:
+                lo = curves[n][alloc[n] - 1]
+                if not np.isfinite(lo):
+                    return float("inf")  # stepping down loses feasibility
+                return (lo - curves[n][alloc[n]]) * tenants[n].weight
+            alloc[min((n for n in names if alloc[n] > 1), key=pain)] -= 1
+        remaining = budget - sum(alloc.values())
+        while remaining > 0:
+            best, best_gain = None, 0.0
+            for name in names:
+                b = alloc[name]
+                if b + 1 > caps[name]:
+                    continue
+                lo = curves[name][b + 1]
+                hi = curves[name][b]
+                if not np.isfinite(lo):
+                    continue
+                gain = ((hi - lo) if np.isfinite(hi) else float("inf"))
+                gain *= tenants[name].weight
+                if gain > best_gain:
+                    best, best_gain = name, gain
+            if best is None:
+                break  # no tenant can convert another unit into cost
+            alloc[best] += 1
+            remaining -= 1
+
+    results = {name: ladders[name][alloc[name]] for name in names}
+    feasible = all(np.isfinite(curves[name][alloc[name]]) for name in names)
+    total_cost = float(sum(tenants[n].weight * results[n].est_workload_cost
+                           for n in names))
+    total_storage = float(sum(r.storage for r in results.values()))
+    trace.append({"mode": "equal_split" if equal_split else "greedy",
+                  "allocations": dict(alloc), "budget": budget})
+    return JointTuningResult(allocations=alloc, results=results,
+                             total_cost=total_cost,
+                             total_storage=total_storage,
+                             feasible=feasible, curves=curves, trace=trace)
 
 
 # --------------------------------------------------------------------------

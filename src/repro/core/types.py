@@ -10,11 +10,17 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Iterable, Mapping, Sequence
+from typing import Iterable
 
 import numpy as np
 
 Vid = tuple[int, ...]
+
+# Tenant namespace handle. Every store/cache/scheduler key that used to be
+# implicitly global is namespaced by one of these; "" is the default tenant
+# (single-tenant deployments never need to mention it).
+TenantId = str
+DEFAULT_TENANT: TenantId = ""
 
 
 def norm_vid(vid: Iterable[int]) -> Vid:

@@ -8,9 +8,8 @@ from __future__ import annotations
 
 from typing import Callable
 
-import numpy as np
 
-from repro.core.types import IndexSpec
+from repro.core.types import DEFAULT_TENANT, IndexSpec, TenantId
 from repro.data.vectors import MultiVectorDatabase
 from repro.index.base import VectorIndex
 from repro.index.bruteforce import FlatIndex
@@ -27,9 +26,18 @@ BUILDERS: dict[str, Callable[..., VectorIndex]] = {
 
 
 class IndexStore:
-    def __init__(self, db: MultiVectorDatabase, seed: int = 0, **builder_kwargs):
+    """Build cache over ONE database. ``namespace`` tags the store with the
+    tenant it belongs to (multi-tenant registries in ``repro.tenancy`` keep
+    one IndexStore per tenant; specs never collide across tenants because
+    each store is its own namespace). Dropping a spec only unlinks it from
+    this store — a ``BatchEngine`` still holding the old store (shadow swap
+    in flight) keeps its index objects alive until it lets go of the store."""
+
+    def __init__(self, db: MultiVectorDatabase, seed: int = 0,
+                 namespace: TenantId = DEFAULT_TENANT, **builder_kwargs):
         self.db = db
         self.seed = seed
+        self.namespace = namespace
         self.builder_kwargs = builder_kwargs
         self._cache: dict[IndexSpec, VectorIndex] = {}
 
@@ -64,3 +72,7 @@ class IndexStore:
         for spec in dropped:
             del self._cache[spec]
         return dropped
+
+    def stats(self) -> dict:
+        return {"namespace": self.namespace, "built": len(self._cache),
+                "specs": sorted(s.name for s in self._cache)}

@@ -17,8 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (cdiv, default_interpret, pad_to,
-                                  tpu_compiler_params)
+from repro.kernels.common import default_interpret, pad_to, tpu_compiler_params
 
 
 def _distance_kernel(q_ref, db_ref, qsq_ref, dbsq_ref, out_ref, acc_ref, *,

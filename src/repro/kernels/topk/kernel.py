@@ -15,10 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (cdiv, default_interpret, pad_to,
-                                  tpu_compiler_params)
+from repro.kernels.common import default_interpret, pad_to, tpu_compiler_params
 
 NEG_INF = float(-3.0e38)
 

@@ -22,7 +22,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, ArchConfig, get_arch, input_specs, list_archs

@@ -46,12 +46,13 @@ def run_schedule(stream, max_batch: int, max_delay_ms: float) -> dict:
     totals = {"batched_scan_dispatches": 0, "per_query_scan_dispatches": 0}
     batches = []
 
-    def execute(pairs):
-        stats = dispatch_plan(compile_batch(pairs))
+    def execute(tickets):
+        stats = dispatch_plan(compile_batch([(t.query, t.plan)
+                                             for t in tickets]))
         totals["batched_scan_dispatches"] += stats["batched_scan_dispatches"]
         totals["per_query_scan_dispatches"] += stats["per_query_scan_dispatches"]
-        batches.append(len(pairs))
-        return [None] * len(pairs)
+        batches.append(len(tickets))
+        return [None] * len(tickets)
 
     plans = {q.qid: plan for _, q, plan in stream}
     mb = MicroBatcher(execute, plan_for=lambda q: plans[q.qid],

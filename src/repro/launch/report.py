@@ -26,7 +26,6 @@ Coefficients (matmul-flops conventions):
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
 
 from repro.configs.base import SHAPES, ArchConfig, get_arch
 from repro.launch.roofline import HW

@@ -14,7 +14,7 @@ operand bytes; exact for all-reduce, upper bound for all-gather).
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 HW = {
     "peak_flops": 197e12,   # bf16 per chip

@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_bytes, extract_cost
 from repro.search.distributed import make_search_step
+from repro.serve.columnstore import padded_device_bytes
 from repro.serve.compiler import compile_batch, dispatch_plan
 
 
@@ -90,6 +91,14 @@ def main():
     args = ap.parse_args()
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
+    # what the serving column store actually pins: kernel-block padding plus
+    # the mesh row-rounding are real device bytes (the memory-governor's
+    # accounting unit) — the logical rows*dim*4 undercounts it
+    resident = padded_device_bytes(args.rows, args.dim,
+                                   row_mult=int(mesh.shape["data"]))
+    logical = args.rows * args.dim * 4
+    print(f"column store residency: {resident/2**30:.3f} GiB padded "
+          f"({resident/logical:.4f}x logical)")
     out = []
     for name, fn in [("naive_gather_scores",
                       make_naive_search_step(mesh, args.k)),
@@ -103,7 +112,9 @@ def main():
                                        valid_n=args.rows - args.rows // 100))]:
         rec = lower_variant(name, fn, mesh, args.rows, args.dim, args.queries)
         rec.update(rows=args.rows, dim=args.dim, queries=args.queries, k=args.k,
-                   mesh="2x16x16" if args.multi_pod else "16x16")
+                   mesh="2x16x16" if args.multi_pod else "16x16",
+                   padded_device_bytes=resident,
+                   logical_device_bytes=logical)
         out.append(rec)
         tb = rec["collectives"]["total_bytes"]
         print(f"{name}: collective_bytes={tb/2**30:.3f} GiB "

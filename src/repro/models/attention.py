@@ -7,7 +7,6 @@ use this pure-JAX version so every dry-run lowers on any backend.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -8,8 +8,6 @@ along the layer axis and threaded through the scans as xs/ys.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

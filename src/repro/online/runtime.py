@@ -175,7 +175,8 @@ class OnlineRuntime:
 
     # ---- execution --------------------------------------------------------
 
-    def _execute(self, pairs: list[tuple[Query, QueryPlan]]) -> list:
+    def _execute(self, tickets: list[Ticket]) -> list:
+        pairs = [(t.query, t.plan) for t in tickets]
         if self.config.measure:
             return self.engine.execute_batch(pairs)
         return self.engine.search_batch(pairs)

@@ -1,12 +1,28 @@
-"""Request queue + micro-batching scheduler (DESIGN.md §7).
+"""Request queue + micro-batching scheduler (DESIGN.md §7, §8).
 
 Single queries are admitted one at a time; the batcher holds them until a
-flush trigger fires — the queue reaching ``max_batch``, or the oldest
-pending request having waited ``max_delay_ms`` — then executes the whole
+flush trigger fires — the pending count reaching ``max_batch``, or the
+oldest pending request having waited ``max_delay_ms`` — then executes one
 micro-batch through the batched engine, which compiles it into plan groups
 (``serve.compiler.compile_batch``) so the MXU kernels always see real
 batches. Grouping happens per flushed batch; the scheduler's job is to
 *create* batches out of a request stream.
+
+Tenancy + fairness: every request is tagged with a ``TenantId`` and queued
+per tenant; a flush selects up to ``max_batch`` tickets by DEFICIT ROUND
+ROBIN over the active tenants (each tenant earns ``quantum`` credits per
+round, spends one per request, keeps leftover deficit while backlogged),
+so a bursty tenant saturating the queue cannot starve a light tenant —
+the light tenant's requests ride the next batch regardless of how deep
+the noisy neighbor's backlog is. DRR is work-conserving: idle tenants
+donate their share, and with one tenant it degenerates to FIFO.
+``fair=False`` switches selection to global arrival order (the FIFO
+baseline the tenant benchmark compares against).
+
+``auto_flush=False`` models a capacity-limited engine: submissions only
+queue; ``poll`` flushes at most ONE batch per call (size or deadline
+triggered), so the caller's poll cadence is the service rate and backlog
+can exceed ``max_batch`` — the regime where fairness matters.
 
 Time is explicit (``now`` in seconds) so schedules are deterministic and
 simulation-driven; wall clock is used when ``now`` is omitted.
@@ -15,12 +31,13 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
-from repro.core.types import Query, QueryPlan
+from repro.core.types import DEFAULT_TENANT, Query, QueryPlan, TenantId
 
 
 @dataclass
@@ -30,6 +47,7 @@ class Ticket:
     query: Query
     plan: QueryPlan
     t_submit: float
+    tenant: TenantId = DEFAULT_TENANT
     t_done: float | None = None
     ids: np.ndarray | None = None
     metrics: object | None = None  # ExecutionMetrics when measuring
@@ -51,6 +69,7 @@ class BatcherStats:
     flush_size: int = 0      # flushes triggered by the batch-size cap
     flush_deadline: int = 0  # flushes triggered by the oldest-waiter deadline
     flush_forced: int = 0    # explicit drains
+    tenant_queries: dict = field(default_factory=dict)  # TenantId -> served
 
     @property
     def mean_batch(self) -> float:
@@ -60,30 +79,47 @@ class BatcherStats:
         return {"batches": self.batches, "queries": self.queries,
                 "mean_batch": self.mean_batch, "flush_size": self.flush_size,
                 "flush_deadline": self.flush_deadline,
-                "flush_forced": self.flush_forced}
+                "flush_forced": self.flush_forced,
+                "tenant_queries": dict(sorted(self.tenant_queries.items()))}
 
 
 class MicroBatcher:
     """Deadline/size-triggered micro-batching over an execute callback.
 
-    ``execute(pairs)`` runs a flushed batch and returns one result per pair
-    in order — ``BatchEngine.search_batch`` (ids) or ``execute_batch``
-    (metrics); results land on the tickets. ``plan_for(query)`` resolves the
-    plan at admission (the plan-cache hot path), so a generation swap
-    between submit and flush never mixes plans inside one batch entry.
+    ``execute(tickets)`` runs a flushed batch and returns one result per
+    ticket in order — ids (``BatchEngine.search_batch``) or metrics
+    (``execute_batch``); results land on the tickets, whose ``tenant`` tag
+    lets a multi-tenant executor route each entry to its tenant's engine.
+    ``plan_for(query)`` resolves the plan at admission (the plan-cache hot
+    path), so a generation swap between submit and flush never mixes plans
+    inside one batch entry; callers that resolve plans themselves (the
+    multi-tenant runtime, which needs the tenant namespace) pass ``plan=``
+    to ``submit`` instead.
     """
 
-    def __init__(self, execute: Callable[[list[tuple[Query, QueryPlan]]], list],
+    def __init__(self, execute: Callable[[list[Ticket]], list],
                  plan_for: Callable[[Query], QueryPlan],
-                 max_batch: int = 32, max_delay_ms: float = 5.0):
+                 max_batch: int = 32, max_delay_ms: float = 5.0,
+                 quantum: int = 1, fair: bool = True,
+                 auto_flush: bool = True):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if quantum < 1:
+            raise ValueError("quantum must be >= 1")
         self.execute = execute
         self.plan_for = plan_for
         self.max_batch = max_batch
         self.max_delay_ms = max_delay_ms
+        self.quantum = quantum
+        self.fair = fair
+        self.auto_flush = auto_flush
         self.stats = BatcherStats()
-        self._pending: list[Ticket] = []
+        self._queues: dict[TenantId, deque[Ticket]] = {}
+        self._ring: deque[TenantId] = deque()      # active tenants, RR order
+        self._deficit: dict[TenantId, float] = {}
+        self._mid_turn = False  # ring head resumes an interrupted DRR turn
+        self._arrivals: deque[Ticket] = deque()    # global arrival order
+        self._n_pending = 0
         # Serializes admission (plan resolution + enqueue, as one atomic
         # step) and flush execution: a thread-mode retune swap holds this
         # lock across drain + generation bump, so no request can resolve
@@ -93,42 +129,112 @@ class MicroBatcher:
         self.lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self._pending)
+        return self._n_pending
 
-    def submit(self, query: Query, now: float | None = None) -> Ticket:
+    def pending(self, tenant: TenantId | None = None) -> int:
+        if tenant is None:
+            return self._n_pending
+        return len(self._queues.get(tenant, ()))
+
+    def submit(self, query: Query, now: float | None = None,
+               tenant: TenantId = DEFAULT_TENANT,
+               plan: QueryPlan | None = None) -> Ticket:
         now = time.time() if now is None else now
         with self.lock:
-            ticket = Ticket(query=query, plan=self.plan_for(query),
-                            t_submit=now)
-            self._pending.append(ticket)
-            if len(self._pending) >= self.max_batch:
+            if plan is None:
+                plan = self.plan_for(query)
+            ticket = Ticket(query=query, plan=plan, t_submit=now,
+                            tenant=tenant)
+            q = self._queues.get(tenant)
+            if q is None:
+                q = self._queues[tenant] = deque()
+            if not q:  # tenant (re)activates: joins the DRR ring
+                self._ring.append(tenant)
+                self._deficit.setdefault(tenant, 0.0)
+            q.append(ticket)
+            self._arrivals.append(ticket)
+            self._n_pending += 1
+            if self.auto_flush and self._n_pending >= self.max_batch:
                 self._flush(now, "size")
         return ticket
 
     def poll(self, now: float | None = None) -> list[Ticket]:
-        """Flush iff the oldest pending request has exceeded the deadline;
-        returns the tickets completed by this call."""
+        """Flush at most one batch: when the oldest pending request has
+        exceeded the deadline, or (``auto_flush=False`` service mode) when a
+        full batch is waiting. Returns the tickets completed by this call."""
         now = time.time() if now is None else now
         with self.lock:
-            if not self._pending:
+            if not self._n_pending:
                 return []
-            oldest = self._pending[0].t_submit
-            if (now - oldest) * 1e3 >= self.max_delay_ms:
+            oldest = self._oldest_submit()
+            if oldest is not None and (now - oldest) * 1e3 >= self.max_delay_ms:
                 return self._flush(now, "deadline")
+            if not self.auto_flush and self._n_pending >= self.max_batch:
+                return self._flush(now, "size")
         return []
 
     def drain(self, now: float | None = None) -> list[Ticket]:
-        """Force-flush whatever is pending (shutdown / end of trace)."""
+        """Force-flush everything pending (shutdown / end of trace), in
+        batches of at most ``max_batch``."""
         now = time.time() if now is None else now
+        out: list[Ticket] = []
         with self.lock:
-            if not self._pending:
-                return []
-            return self._flush(now, "forced")
+            while self._n_pending:
+                out.extend(self._flush(now, "forced"))
+        return out
+
+    # ---- internals (caller must hold ``self.lock``) -----------------------
+
+    def _oldest_submit(self) -> float | None:
+        while self._arrivals and self._arrivals[0].done:
+            self._arrivals.popleft()  # lazily discard flushed tickets
+        return self._arrivals[0].t_submit if self._arrivals else None
+
+    def _take(self, tenant: TenantId) -> Ticket:
+        ticket = self._queues[tenant].popleft()
+        self._n_pending -= 1
+        return ticket
+
+    def _select(self, n: int) -> list[Ticket]:
+        """Pick the next batch: DRR over active tenants, or global arrival
+        order when ``fair=False``."""
+        out: list[Ticket] = []
+        if not self.fair:
+            while len(out) < n and self._oldest_submit() is not None:
+                ticket = self._arrivals.popleft()
+                assert self._queues[ticket.tenant][0] is ticket
+                out.append(self._take(ticket.tenant))
+                if not self._queues[ticket.tenant]:
+                    self._ring.remove(ticket.tenant)
+                    self._deficit[ticket.tenant] = 0.0
+            return out
+        while len(out) < n and self._ring:
+            tenant = self._ring.popleft()
+            q = self._queues[tenant]
+            if self._mid_turn:
+                self._mid_turn = False  # resumed turn: leftover deficit only
+            else:
+                self._deficit[tenant] += self.quantum  # new round, new credit
+            while q and self._deficit[tenant] >= 1 and len(out) < n:
+                out.append(self._take(tenant))
+                self._deficit[tenant] -= 1
+            if not q:
+                self._deficit[tenant] = 0.0  # DRR: idle tenants lose deficit
+            elif len(out) < n:
+                self._ring.append(tenant)    # spent its deficit this round
+            elif self._deficit[tenant] >= 1:
+                # batch filled mid-turn: keep the head slot AND the leftover
+                # deficit, but no fresh credit on resume — otherwise a
+                # quantum >= max_batch tenant would monopolize every flush
+                self._ring.appendleft(tenant)
+                self._mid_turn = True
+            else:
+                self._ring.append(tenant)  # turn ended exactly at the cap
+        return out
 
     def _flush(self, now: float, reason: str) -> list[Ticket]:
-        """Caller must hold ``self.lock``."""
-        batch, self._pending = self._pending, []
-        results = self.execute([(t.query, t.plan) for t in batch])
+        batch = self._select(min(self.max_batch, self._n_pending))
+        results = self.execute(batch)
         for ticket, res in zip(batch, results):
             if hasattr(res, "ids"):  # ExecutionMetrics
                 ticket.metrics = res
@@ -137,6 +243,8 @@ class MicroBatcher:
                 ticket.ids = res
             ticket.t_done = now
             ticket.batch_size = len(batch)
+            self.stats.tenant_queries[ticket.tenant] = \
+                self.stats.tenant_queries.get(ticket.tenant, 0) + 1
         self.stats.batches += 1
         self.stats.queries += len(batch)
         setattr(self.stats, f"flush_{reason}",

@@ -12,7 +12,11 @@ with globally unique qids, at a fixed arrival rate (``qps``). Scenarios:
                    which one vid (one modality) dominates arrivals;
   - ``hot_item`` : queries concentrated around a few hot database rows
                    (skewed item popularity — identical plan signatures,
-                   the plan cache's and micro-batcher's best case).
+                   the plan cache's and micro-batcher's best case);
+  - ``tenant_skew`` : multiple tenants' streams merged, each tagged with
+                   its ``TenantId``; inside a window one "noisy" tenant's
+                   arrival rate is multiplied while the victims keep their
+                   base rate (the noisy-neighbor isolation scenario).
 """
 from __future__ import annotations
 
@@ -21,7 +25,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.types import Query, Vid, Workload, norm_vid
+from repro.core.types import (DEFAULT_TENANT, Query, TenantId, Vid, Workload,
+                              norm_vid)
 from repro.data.vectors import MultiVectorDatabase, _normalize, _unit_noise
 
 
@@ -29,19 +34,21 @@ from repro.data.vectors import MultiVectorDatabase, _normalize, _unit_noise
 class TimedQuery:
     t: float
     query: Query
+    tenant: TenantId = DEFAULT_TENANT
 
 
 class _QueryFactory:
     """Builds near-manifold queries (a database row + per-column noise)
-    with a monotonically increasing qid."""
+    with a monotonically increasing qid. ``qids`` lets several factories
+    (one per tenant) share one counter so qids stay globally unique."""
 
     def __init__(self, db: MultiVectorDatabase, k: int, seed: int,
-                 noise: float = 0.5, qid_start: int = 0):
+                 noise: float = 0.5, qid_start: int = 0, qids=None):
         self.db = db
         self.k = k
         self.noise = noise
         self.rng = np.random.default_rng(seed)
-        self._qids = itertools.count(qid_start)
+        self._qids = qids if qids is not None else itertools.count(qid_start)
 
     def make(self, vid: Vid, row: int | None = None) -> Query:
         vid = norm_vid(vid)
@@ -139,9 +146,59 @@ def hot_item_trace(db: MultiVectorDatabase, vid: Vid, n: int,
     return out
 
 
+def tenant_skew_trace(db: MultiVectorDatabase,
+                      tenants: dict[TenantId, Workload], n: int,
+                      qps: float = 200.0, noisy: TenantId | None = None,
+                      noisy_mult: float = 8.0, noisy_start: float = 0.3,
+                      noisy_len: float = 0.4, k: int | None = None,
+                      seed: int = 0, t0: float = 0.0, qid_start: int = 0,
+                      dbs: dict[TenantId, MultiVectorDatabase] | None = None,
+                      ) -> list[TimedQuery]:
+    """Noisy-neighbor scenario: every tenant contributes an independent
+    steady stream at ``qps / len(tenants)``; inside the noisy window
+    (fractions of the nominal trace span ``n / qps``) the ``noisy``
+    tenant's arrival rate is multiplied by ``noisy_mult`` while the
+    victims keep their base rate. Streams are merged by arrival time and
+    each ``TimedQuery`` carries its tenant tag. ``dbs`` optionally maps
+    tenants to their own databases (default: the shared ``db``)."""
+    if not tenants:
+        raise ValueError("tenant_skew needs at least one tenant workload")
+    names = sorted(tenants)
+    noisy = names[-1] if noisy is None else noisy
+    if noisy not in tenants:
+        raise ValueError(f"noisy tenant {noisy!r} not in workloads")
+    dbs = dbs or {}
+    base_rate = qps / len(names)
+    span = n / qps
+    win_lo, win_hi = t0 + noisy_start * span, t0 + (noisy_start + noisy_len) * span
+    qids = itertools.count(qid_start)
+    facs, mixes, next_t = {}, {}, {}
+    for i, name in enumerate(names):
+        wl = tenants[name]
+        tdb = dbs.get(name, db)
+        tk = k if k is not None else wl.queries[0].k
+        facs[name] = _QueryFactory(tdb, tk, seed + 101 * i, qids=qids)
+        mixes[name] = _workload_vids(wl)
+        next_t[name] = t0 + (i + 1) / qps  # stagger first arrivals
+    out: list[TimedQuery] = []
+    for _ in range(n):
+        name = min(next_t, key=lambda tid: (next_t[tid], tid))
+        t = next_t[name]
+        fac = facs[name]
+        vids, probs = mixes[name]
+        vid = vids[int(fac.rng.choice(len(vids), p=probs))]
+        out.append(TimedQuery(t=t, query=fac.make(vid), tenant=name))
+        rate = base_rate
+        if name == noisy and win_lo <= t < win_hi:
+            rate *= noisy_mult
+        next_t[name] = t + 1.0 / rate
+    return out
+
+
 def make_trace(db: MultiVectorDatabase, scenario: str, **kw) -> list[TimedQuery]:
     gens = {"steady": steady_trace, "diurnal": diurnal_trace,
-            "burst": burst_trace, "hot_item": hot_item_trace}
+            "burst": burst_trace, "hot_item": hot_item_trace,
+            "tenant_skew": tenant_skew_trace}
     if scenario not in gens:
         raise ValueError(f"unknown scenario {scenario!r}; "
                          f"choose from {sorted(gens)}")

@@ -11,12 +11,11 @@ extra, beyond-the-40-cells row in EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 from repro.kernels.topk.kernel import NEG_INF

@@ -35,6 +35,17 @@ def _round_up(n: int, multiple: int) -> int:
     return -(-n // multiple) * multiple
 
 
+def padded_device_bytes(n_rows: int, dim: int, block_rows: int = 128,
+                        block_dim: int = 128, row_mult: int = 1,
+                        itemsize: int = 4) -> int:
+    """Device footprint of one resident column AFTER kernel-block padding —
+    what a column actually pins on device, not its logical nbytes.
+    ``row_mult`` is the mesh data-axis size when row-sharded (rows are
+    additionally rounded to a multiple of it, matching ``device()``)."""
+    rm = _round_up(block_rows, row_mult) if row_mult > 1 else block_rows
+    return _round_up(n_rows, rm) * _round_up(dim, block_dim) * itemsize
+
+
 @dataclass
 class DeviceColumn:
     """One vid's device-resident concat, padded to kernel block shapes."""
@@ -47,6 +58,12 @@ class DeviceColumn:
     @property
     def padded_dim(self) -> int:
         return int(self.data.shape[1])
+
+    @property
+    def device_bytes(self) -> int:
+        """PADDED device footprint (the governor's accounting unit) — the
+        logical ``n_rows * dim`` undercounts what the column actually pins."""
+        return int(self.data.size) * int(self.data.dtype.itemsize)
 
     def pad_queries(self, qmat: np.ndarray) -> jnp.ndarray:
         """(B, dim) host queries -> (B, padded_dim) device array."""
@@ -99,6 +116,33 @@ class ColumnStore:
                 arr = jax.device_put(arr, row_sharding(self.mesh, self.axis))
             self._device[vid] = DeviceColumn(vid=vid, data=arr, n_rows=n, dim=d)
         return self._device[vid]
+
+    def device_bytes(self, vid: Vid) -> int:
+        """Padded device bytes ``device(vid)`` would pin — computable BEFORE
+        materialization (the governor admits against this number), and equal
+        to ``device(vid).device_bytes`` afterwards."""
+        vid = norm_vid(vid)
+        row_mult = 1
+        if self.mesh is not None:
+            row_mult = int(self.mesh.shape[self.axis])
+        return padded_device_bytes(self.db.n_rows, self.db.dim(vid),
+                                   block_rows=self.block_rows,
+                                   block_dim=self.block_dim,
+                                   row_mult=row_mult)
+
+    def total_device_bytes(self) -> int:
+        return sum(col.device_bytes for col in self._device.values())
+
+    def evict_device(self, vid: Vid) -> bool:
+        """Spill one resident column back to host: the device array is
+        released (host concat cache is retained, so a later ``device()``
+        re-pads and re-uploads bit-identically). Returns whether it was
+        resident."""
+        return self._device.pop(norm_vid(vid), None) is not None
+
+    def resident(self) -> list[Vid]:
+        """Vids currently resident on device."""
+        return sorted(self._device)
 
     def materialized(self) -> list[Vid]:
         return sorted(set(self._host) | set(self._device))

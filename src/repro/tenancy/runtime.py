@@ -1,0 +1,220 @@
+"""Multi-tenant serving runtime (DESIGN.md §8).
+
+One device, many databases: each tenant brings its own database, workload,
+recall target, and storage slice; the runtime shares the machine between
+them without letting them observe each other —
+
+  - stores are NAMESPACED (``TenantIndexStores`` / ``TenantColumnStores``):
+    per-tenant results are bit-identical to isolated single-tenant runs;
+  - device memory is GOVERNED: one ``MemoryGovernor`` arbitrates padded
+    device bytes across every tenant's column store (per-tenant quotas,
+    global budget, LRU spill back to host);
+  - the plan cache is shared but tenant-keyed with PER-TENANT generations:
+    one tenant's retune swap never invalidates another's templates;
+  - the micro-batcher is shared with DEFICIT-ROUND-ROBIN flush selection:
+    a bursty tenant cannot starve a light one out of its batch slots;
+  - tuning can be JOINT: ``tune_all`` runs ``core.tuner.tune_tenants``
+    (greedy knapsack over per-tenant budget ladders, warm-started from the
+    serving configurations) and swaps every tenant's result atomically
+    per tenant.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.tuner import (JointTuningResult, Mint, TenantTask,
+                              tune_tenants)
+from repro.core.types import (Constraints, Query, QueryPlan, TenantId,
+                              TuningResult, Workload)
+from repro.data.vectors import MultiVectorDatabase
+from repro.online.plancache import PlanCache, constraints_fingerprint
+from repro.online.runtime import RuntimeConfig
+from repro.online.scheduler import MicroBatcher, Ticket
+from repro.online.trace import TimedQuery
+from repro.serve.engine import BatchEngine
+from repro.tenancy.governor import MemoryGovernor
+from repro.tenancy.stores import TenantColumnStores, TenantIndexStores
+
+
+@dataclass
+class Tenant:
+    """One tenant's deployment description."""
+
+    tenant_id: TenantId
+    db: MultiVectorDatabase
+    mint: Mint
+    workload: Workload
+    constraints: Constraints
+    result: TuningResult | None = None
+    quota_bytes: int | None = None  # None: bounded only by the global budget
+    weight: float = 1.0             # traffic share (joint-tuning objective)
+
+
+class _TenantState:
+    """Live serving state for one registered tenant."""
+
+    def __init__(self, runtime: "MultiTenantRuntime", spec: Tenant):
+        self.spec = spec
+        self.result = (spec.result if spec.result is not None
+                       else spec.mint.tune(spec.workload, spec.constraints))
+        self.planner = spec.mint.planner(spec.constraints)
+        self.cstore = runtime.cstores.register(
+            spec.tenant_id, spec.db, quota_bytes=spec.quota_bytes)
+        self.store = runtime.istores.register(
+            spec.tenant_id, spec.db, seed=spec.mint.seed)
+        self.engine = BatchEngine(spec.db, store=self.store,
+                                  cstore=self.cstore)
+
+
+def _no_default_plan(query: Query) -> QueryPlan:
+    raise RuntimeError("MultiTenantRuntime resolves plans per tenant; "
+                       "submit() must pass the tenant id")
+
+
+class MultiTenantRuntime:
+    """Serving facade over N tenants sharing one device budget."""
+
+    def __init__(self, tenants: list[Tenant], budget_bytes: int,
+                 config: RuntimeConfig | None = None,
+                 plan_cache_capacity: int | None = None,
+                 fair: bool = True, auto_flush: bool = True,
+                 quantum: int = 1):
+        if not tenants:
+            raise ValueError("need at least one tenant")
+        self.config = config or RuntimeConfig()
+        self.governor = MemoryGovernor(budget_bytes)
+        self.cstores = TenantColumnStores(self.governor)
+        self.istores = TenantIndexStores()
+        self.cache = PlanCache(capacity=plan_cache_capacity)
+        self._tenants: dict[TenantId, _TenantState] = {}
+        for spec in tenants:
+            if spec.tenant_id in self._tenants:
+                raise ValueError(f"duplicate tenant {spec.tenant_id!r}")
+            st = _TenantState(self, spec)
+            self._tenants[spec.tenant_id] = st
+            self.cache.register_tenant(
+                spec.tenant_id, constraints_fingerprint(spec.constraints))
+            self.cache.seed(spec.workload, st.result, tenant=spec.tenant_id)
+        self.batcher = MicroBatcher(self._execute, _no_default_plan,
+                                    max_batch=self.config.max_batch,
+                                    max_delay_ms=self.config.max_delay_ms,
+                                    quantum=quantum, fair=fair,
+                                    auto_flush=auto_flush)
+
+    def tenants(self) -> list[TenantId]:
+        return sorted(self._tenants)
+
+    def state(self, tenant: TenantId) -> _TenantState:
+        return self._tenants[tenant]
+
+    # ---- request path -----------------------------------------------------
+
+    def plan_for(self, query: Query, tenant: TenantId) -> QueryPlan:
+        """Tenant-namespaced plan-cache hot path; a miss pays one planner
+        call against the tenant's live configuration."""
+        plan = self.cache.get(query, tenant=tenant)
+        if plan is None:
+            st = self._tenants[tenant]
+            plan = st.planner.plan(query, st.result.configuration)
+            self.cache.put(query, plan, tenant=tenant)
+        return plan
+
+    def submit(self, tenant: TenantId, query: Query,
+               now: float | None = None) -> Ticket:
+        now = time.time() if now is None else now
+        # plan resolution + enqueue under the batcher lock, so a concurrent
+        # swap of THIS tenant can never interleave between them
+        with self.batcher.lock:
+            plan = self.plan_for(query, tenant)
+            return self.batcher.submit(query, now, tenant=tenant, plan=plan)
+
+    def tick(self, now: float | None = None) -> list[Ticket]:
+        return self.batcher.poll(time.time() if now is None else now)
+
+    def drain(self, now: float | None = None) -> list[Ticket]:
+        return self.batcher.drain(now)
+
+    def run_trace(self, trace: list[TimedQuery]) -> list[Ticket]:
+        """Replay a tenant-tagged trace in virtual time; one completed
+        ticket per query, arrival order."""
+        tickets = [None] * len(trace)
+        for i, tq in enumerate(trace):
+            tickets[i] = self.submit(tq.tenant, tq.query, tq.t)
+            self.tick(tq.t)
+        self.drain(trace[-1].t if trace else 0.0)
+        return tickets  # type: ignore[return-value]
+
+    # ---- control path -----------------------------------------------------
+
+    def swap_tenant(self, tenant: TenantId, result: TuningResult,
+                    observed: Workload, now: float | None = None) -> int:
+        """Atomically install one tenant's re-tuned configuration: drain
+        in-flight batches (they complete under their admitted plans), bump
+        ONLY this tenant's plan-cache generation, re-seed its templates,
+        and prune its index store back to the new configuration. Other
+        tenants' templates, stores, and generations are untouched."""
+        st = self._tenants[tenant]
+        with self.batcher.lock:
+            self.batcher.drain(now)
+            st.result = result
+            self.cache.bump_generation(tenant)
+            self.cache.seed(observed, result, tenant=tenant)
+            dropped = len(st.store.prune(result.configuration))
+        return dropped
+
+    def tune_all(self, global_storage: int,
+                 equal_split: bool = False) -> JointTuningResult:
+        """Joint cross-tenant tuning over the serving workloads: split the
+        global storage budget with ``core.tuner.tune_tenants`` (warm-started
+        from each tenant's serving configuration) and swap every tenant onto
+        its allocated result."""
+        tasks = {
+            tid: TenantTask(mint=st.spec.mint, workload=st.spec.workload,
+                            constraints=st.spec.constraints,
+                            weight=st.spec.weight, warm_start=st.result)
+            for tid, st in self._tenants.items()
+        }
+        joint = tune_tenants(tasks, global_storage, equal_split=equal_split)
+        for tid, result in joint.results.items():
+            self.swap_tenant(tid, result, self._tenants[tid].spec.workload)
+        return joint
+
+    # ---- introspection ----------------------------------------------------
+
+    def generation_of(self, tenant: TenantId) -> int:
+        return self.cache.generation_of(tenant)
+
+    def stats(self) -> dict:
+        return {
+            "governor": self.governor.stats(),
+            "plan_cache": self.cache.stats(),
+            "batcher": self.batcher.stats.as_dict(),
+            "tenants": {
+                tid: {"generation": self.cache.generation_of(tid),
+                      "dispatches": st.engine.counters.as_dict(),
+                      "store": st.store.stats(),
+                      "resident_vids": st.cstore.resident(),
+                      "device_bytes": self.governor.tenant_bytes(tid)}
+                for tid, st in sorted(self._tenants.items())
+            },
+        }
+
+    # ---- execution --------------------------------------------------------
+
+    def _execute(self, tickets: list[Ticket]) -> list:
+        """Route each flushed ticket to its tenant's engine (mixed batches
+        split per tenant — plan-group compilation happens per tenant since
+        vids/specs from different databases must never share a dispatch)."""
+        out: list = [None] * len(tickets)
+        by_tenant: dict[TenantId, list[int]] = {}
+        for i, t in enumerate(tickets):
+            by_tenant.setdefault(t.tenant, []).append(i)
+        for tenant, idxs in by_tenant.items():
+            eng = self._tenants[tenant].engine
+            pairs = [(tickets[i].query, tickets[i].plan) for i in idxs]
+            res = (eng.execute_batch(pairs) if self.config.measure
+                   else eng.search_batch(pairs))
+            for i, r in zip(idxs, res):
+                out[i] = r
+        return out

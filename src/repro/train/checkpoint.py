@@ -12,7 +12,6 @@ import os
 import re
 import shutil
 import threading
-import time
 
 import jax
 import numpy as np

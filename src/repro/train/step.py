@@ -9,8 +9,6 @@ Knobs (all visible in the roofline collective term):
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

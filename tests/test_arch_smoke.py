@@ -86,7 +86,6 @@ def _copy_cache(cfg, small, big, S):
 
 @pytest.mark.parametrize("arch", ["granite-moe-1b-a400m"])
 def test_moe_sorted_matches_dense(arch):
-    import dataclasses
     from repro.models.moe import moe_dense, moe_sorted
     cfg = get_arch(arch).reduced()
     key = jax.random.PRNGKey(2)

@@ -2,13 +2,11 @@
 import numpy as np
 import pytest
 
-from repro.core.estimators import (EstimatorBundle, LinearFit, LogFit,
-                                   StorageEstimator, fit_linear, fit_log,
-                                   train_estimators)
+from repro.core.estimators import StorageEstimator, fit_linear, fit_log
 from repro.core.planner import QueryPlanner, WhatIfContext, algorithm1_search, algorithm2_dp
 from repro.core.searcher import BeamSearchParams, ConfigurationSearcher
 from repro.core.tuner import Mint, execute_workload, ground_truth_cache
-from repro.core.types import Constraints, IndexSpec, Query, Workload, norm_vid
+from repro.core.types import Constraints, IndexSpec, norm_vid
 from repro.data.vectors import make_database, make_queries, make_workload
 from repro.index.registry import IndexStore
 

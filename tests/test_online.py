@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.tuner import Mint, execute_plan
-from repro.core.types import Constraints, IndexSpec, Query, QueryPlan, Workload
+from repro.core.types import Constraints, IndexSpec, QueryPlan, Workload
 from repro.data.vectors import make_database, make_queries
 from repro.index.registry import IndexStore
 from repro.online import (DriftDetector, MicroBatcher, OnlineRuntime,
@@ -311,6 +311,47 @@ def test_engine_swap_store_serves_identically(db, mint, day, cons, tuned):
     [ids_after] = engine.search_batch([(q, plan)])
     np.testing.assert_array_equal(np.asarray(ids_before),
                                   np.asarray(ids_after))
+
+
+def test_swap_store_inflight_drop_prune_isolation(db, day, tuned):
+    """Shadow-swap safety: while a BatchEngine still serves from the OLD
+    store, drop/prune on the NEW store must not free (or rebuild) anything
+    the old store references — and pruning the old store after the engine
+    moved on must not disturb the new store's indexes. Stores are
+    independent namespaces: the same spec builds a distinct index object in
+    each, and drop() only unlinks from its own store."""
+    from repro.serve.engine import BatchEngine
+    q = day.queries[0]
+    plan = tuned.plans[q.qid]
+    assert plan.indexes  # the tuned plan actually references indexes
+    old_store, new_store = IndexStore(db, seed=0), IndexStore(db, seed=0)
+    engine = BatchEngine(db, store=old_store)
+    [ids_old] = engine.search_batch([(q, plan)])  # builds specs in old
+    old_objs = {spec: old_store.get(spec) for spec in plan.indexes}
+
+    # shadow-build the same specs in the new store, then drop/prune them
+    # BEFORE the swap: the in-flight engine (old store) must be unaffected
+    for spec in plan.indexes:
+        assert new_store.get(spec) is not old_objs[spec]
+    for spec in plan.indexes:
+        assert new_store.drop(spec)
+    assert new_store.prune([]) == []  # already empty — prune is a no-op
+    for spec in plan.indexes:  # old store still holds ITS objects
+        assert old_store.get(spec) is old_objs[spec]
+    [ids_mid] = engine.search_batch([(q, plan)])
+    np.testing.assert_array_equal(np.asarray(ids_old), np.asarray(ids_mid))
+
+    # swap; pruning the old store now must not touch the new store's builds
+    for spec in plan.indexes:
+        new_store.get(spec)
+    new_objs = {spec: new_store.get(spec) for spec in plan.indexes}
+    engine.swap_store(new_store)
+    assert set(old_store.prune([])) == set(old_objs)
+    assert old_store.built_specs() == []
+    for spec in plan.indexes:
+        assert new_store.get(spec) is new_objs[spec]  # no rebuild happened
+    [ids_new] = engine.search_batch([(q, plan)])
+    np.testing.assert_array_equal(np.asarray(ids_old), np.asarray(ids_new))
 
 
 # ---- trace generators -----------------------------------------------------

@@ -4,10 +4,10 @@ import time
 import numpy as np
 import pytest
 
-from repro.core.planner import QueryPlanner, WhatIfContext, algorithm2_dp
+from repro.core.planner import WhatIfContext, algorithm2_dp
 from repro.core.planner_jax import plan_dp_jax, submask_tables
 from repro.core.tuner import Mint
-from repro.core.types import Constraints, IndexSpec
+from repro.core.types import IndexSpec
 from repro.data.vectors import make_database, make_queries
 
 

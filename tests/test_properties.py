@@ -8,9 +8,9 @@ pytestmark = pytest.mark.slow  # hypothesis sweeps; fast-lane property
 pytest.importorskip("hypothesis", reason="hypothesis not installed (dev dep)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.estimators import LinearFit, LogFit, fit_linear, fit_log
+from repro.core.estimators import LogFit, fit_linear
 from repro.core.planner import _coverage, _relevant_eks
-from repro.core.types import IndexSpec, norm_vid
+from repro.core.types import norm_vid
 from repro.index.graph import add_reverse_edges
 
 

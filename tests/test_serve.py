@@ -6,7 +6,7 @@ import pytest
 from repro.core.planner import WhatIfContext, _plan_cost, algorithm1_search
 from repro.core.tuner import (Mint, execute_plan, execute_workload,
                               ground_truth_cache)
-from repro.core.types import Constraints, IndexSpec, Query, QueryPlan
+from repro.core.types import Constraints, IndexSpec, QueryPlan
 from repro.data.vectors import make_database, make_queries, make_workload
 from repro.index.registry import IndexStore
 from repro.serve.columnstore import ColumnStore

@@ -1,0 +1,478 @@
+"""Multi-tenant serving tests: device-memory governor (quotas, budget, LRU
+spill), namespaced plan cache (per-tenant generations, LRU capacity),
+deficit-round-robin fairness, tenant-skew traces, joint cross-tenant tuning
+— and the acceptance property that two tenants served by one
+``MultiTenantRuntime`` produce bit-identical per-query results to two
+isolated single-tenant runs."""
+import numpy as np
+import pytest
+
+from repro.core.tuner import Mint, TenantTask, tune_tenants
+from repro.core.types import Constraints, IndexSpec, QueryPlan, Workload
+from repro.data.vectors import make_database, make_queries
+from repro.online import (OnlineRuntime, RuntimeConfig, TimedQuery,
+                          tenant_skew_trace)
+from repro.online.plancache import PlanCache
+from repro.online.scheduler import MicroBatcher
+from repro.serve.columnstore import ColumnStore, padded_device_bytes
+from repro.tenancy import (MemoryGovernor, MultiTenantRuntime, Tenant,
+                           TenantColumnStores, TenantIndexStores)
+
+K = 10
+
+
+def _wl(db, vids, seed=0):
+    qs = make_queries(db, vids, k=K, seed=seed)
+    return Workload(queries=qs, probs=np.ones(len(qs)))
+
+
+@pytest.fixture(scope="module")
+def db_a():
+    return make_database(1100, [("a", 24), ("b", 32), ("c", 28)], seed=0)
+
+
+@pytest.fixture(scope="module")
+def db_b():
+    return make_database(900, [("x", 16), ("y", 24)], seed=7)
+
+
+@pytest.fixture(scope="module")
+def wl_a(db_a):
+    return _wl(db_a, [(0,), (1,), (0, 2)], seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl_b(db_b):
+    return _wl(db_b, [(0, 1)], seed=1)
+
+
+@pytest.fixture(scope="module")
+def mint_a(db_a):
+    return Mint(db_a, index_kind="ivf", seed=0, min_sample_rows=300)
+
+
+@pytest.fixture(scope="module")
+def mint_b(db_b):
+    return Mint(db_b, index_kind="ivf", seed=0, min_sample_rows=300)
+
+
+@pytest.fixture(scope="module")
+def cons_a():
+    return Constraints(theta_recall=0.85, theta_storage=4)
+
+
+@pytest.fixture(scope="module")
+def cons_b():
+    return Constraints(theta_recall=0.85, theta_storage=2)
+
+
+@pytest.fixture(scope="module")
+def tuned_a(mint_a, wl_a, cons_a):
+    return mint_a.tune(wl_a, cons_a)
+
+
+@pytest.fixture(scope="module")
+def tuned_b(mint_b, wl_b, cons_b):
+    return mint_b.tune(wl_b, cons_b)
+
+
+# ---- column-store device-byte accounting ----------------------------------
+
+
+def test_padded_device_bytes_matches_materialized(db_a):
+    cs = ColumnStore(db_a)
+    for vid in [(0,), (1, 2), (0, 1, 2)]:
+        pre = cs.device_bytes(vid)  # computable before materialization
+        col = cs.device(vid)
+        assert col.device_bytes == pre
+        # padding is real memory: padded >= logical nbytes
+        assert pre >= col.n_rows * col.dim * 4
+    assert cs.total_device_bytes() == sum(
+        cs.device_bytes(v) for v in [(0,), (1, 2), (0, 1, 2)])
+    assert padded_device_bytes(100, 10) == 128 * 128 * 4
+    assert padded_device_bytes(129, 10) == 256 * 128 * 4
+
+
+def test_evict_device_rematerializes_bit_identical(db_a):
+    cs = ColumnStore(db_a, block_rows=64, block_dim=32)
+    before = np.asarray(cs.device((0, 1)).data)
+    assert cs.resident() == [(0, 1)]
+    assert cs.evict_device((0, 1)) and not cs.evict_device((0, 1))
+    assert cs.resident() == []
+    np.testing.assert_array_equal(np.asarray(cs.device((0, 1)).data), before)
+
+
+# ---- governor -------------------------------------------------------------
+
+
+def _tiny_stores(budget, quotas=(None, None)):
+    gov = MemoryGovernor(budget)
+    stores = TenantColumnStores(gov)
+    dbs = {
+        "a": make_database(20, [("u", 4), ("v", 6)], seed=1),
+        "b": make_database(20, [("u", 4), ("v", 6)], seed=2),
+    }
+    for name, quota in zip(("a", "b"), quotas):
+        stores.register(name, dbs[name], quota_bytes=quota,
+                        block_rows=8, block_dim=8)
+    return gov, stores
+
+
+def test_governor_charges_padded_bytes_and_lru_evicts():
+    # each column pads to (24 rows, 8 dim) fp32 = 768 bytes
+    col_bytes = padded_device_bytes(20, 4, block_rows=8, block_dim=8)
+    assert col_bytes == 24 * 8 * 4
+    gov, stores = _tiny_stores(budget=2 * col_bytes)
+    sa, sb = stores.get("a"), stores.get("b")
+    sa.device((0,))
+    sb.device((0,))
+    assert gov.total_bytes == 2 * col_bytes and gov.evictions == 0
+    sa.device((0,))  # hit: refreshes a's recency past b's
+    sb.device((1,))  # budget full -> evicts the LRU column: b's own (0,)
+    assert gov.evictions == 1
+    assert sb.resident() == [(1,)] and sa.resident() == [(0,)]
+    assert gov.total_bytes == 2 * col_bytes <= gov.budget_bytes
+    assert gov.peak_bytes <= gov.budget_bytes and gov.overcommits == 0
+
+
+def test_governor_quota_evicts_own_columns_first():
+    col_bytes = padded_device_bytes(20, 4, block_rows=8, block_dim=8)
+    gov, stores = _tiny_stores(budget=10 * col_bytes,
+                               quotas=(col_bytes, None))
+    sa, sb = stores.get("a"), stores.get("b")
+    sb.device((0,))
+    sa.device((0,))
+    sa.device((1,))  # a over ITS quota -> evicts a's (0,), not b's
+    assert sa.resident() == [(1,)] and sb.resident() == [(0,)]
+    assert gov.tenant_bytes("a") <= col_bytes
+
+
+def test_governor_overcommit_single_oversized_column():
+    db = make_database(40, [("u", 4)], seed=3)
+    gov = MemoryGovernor(budget_bytes=100)  # smaller than ONE padded column
+    stores = TenantColumnStores(gov)
+    s = stores.register("a", db, block_rows=8, block_dim=8)
+    col = s.device((0,))  # must still serve
+    assert col.n_rows == 40 and gov.overcommits >= 1
+    assert gov.total_bytes == col.device_bytes > gov.budget_bytes
+
+
+# ---- plan cache: tenant namespaces + LRU bound ----------------------------
+
+
+def test_plan_cache_per_tenant_generations(db_a, wl_a, tuned_a):
+    cache = PlanCache()
+    cache.register_tenant("a", (0.9, 4, "count"))
+    cache.register_tenant("b", (0.8, 2, "count"))
+    assert cache.seed(wl_a, tuned_a, tenant="a") > 0
+    assert cache.seed(wl_a, tuned_a, tenant="b") > 0
+    q = make_queries(db_a, [(0,)], k=K, seed=5)[0]
+    assert cache.get(q, tenant="a") is not None
+    assert cache.get(q, tenant="b") is not None
+    # tenant a's retune swap must not invalidate b's templates
+    assert cache.bump_generation("a") == 1
+    assert cache.generation_of("a") == 1 and cache.generation_of("b") == 0
+    assert cache.get(q, tenant="a") is None
+    assert cache.get(q, tenant="b") is not None
+
+
+def test_plan_cache_tenants_never_share_templates(db_a):
+    """Same vid/k, different tenants: distinct keys (namespacing), so a
+    template written by one tenant is invisible to the other."""
+    cache = PlanCache()
+    cache.register_tenant("a", (0.9, 4, "count"))
+    cache.register_tenant("b", (0.9, 4, "count"))
+    q = make_queries(db_a, [(0,)], k=K, seed=6)[0]
+    cache.put(q, QueryPlan(q.qid, [IndexSpec(vid=(0,), kind="ivf")], [32],
+                           1.0, 1.0), tenant="a")
+    assert cache.get(q, tenant="a") is not None
+    assert cache.get(q, tenant="b") is None
+
+
+def test_plan_cache_lru_capacity_and_eviction_stats(db_a):
+    cache = PlanCache(capacity=2)
+    plan = QueryPlan(0, [IndexSpec(vid=(0,), kind="ivf")], [16], 1.0, 1.0)
+    qs = make_queries(db_a, [(0,), (1,), (2,)], k=K, seed=8)
+    cache.put(qs[0], plan)
+    cache.put(qs[1], plan)
+    assert cache.get(qs[0]) is not None  # refresh: (0,) is now hottest
+    cache.put(qs[2], plan)  # over capacity -> evicts coldest = (1,)
+    assert cache.evictions == 1 and len(cache) == 2
+    assert cache.get(qs[1]) is None
+    assert cache.get(qs[0]) is not None and cache.get(qs[2]) is not None
+    assert cache.stats()["evictions"] == 1
+    assert cache.stats()["capacity"] == 2
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+
+
+# ---- scheduler: deficit-round-robin fairness ------------------------------
+
+
+def _backlog_batcher(fair):
+    orders = []
+
+    def execute(tickets):
+        orders.append([(t.tenant, t.query.qid) for t in tickets])
+        return [np.asarray([0])] * len(tickets)
+
+    mb = MicroBatcher(execute,
+                      lambda q: QueryPlan(q.qid, [], [], 0.0, 1.0),
+                      max_batch=4, max_delay_ms=1e9, fair=fair,
+                      auto_flush=False)
+    return mb, orders
+
+
+def _mkq(db, qid, vid=(0,)):
+    q = make_queries(db, [vid], k=K, seed=qid)[0]
+    q.qid = qid
+    return q
+
+
+@pytest.mark.parametrize("fair", [True, False])
+def test_drr_fairness_vs_fifo_under_backlog(db_a, fair):
+    """A noisy tenant with a deep backlog: DRR serves the light tenant's
+    requests in the very next batch; FIFO makes them wait out the whole
+    backlog. (auto_flush=False models a capacity-limited engine: one batch
+    per poll, so backlog can exceed max_batch.)"""
+    mb, orders = _backlog_batcher(fair)
+    for i in range(12):  # noisy tenant floods first
+        mb.submit(_mkq(db_a, i), now=0.0, tenant="noisy")
+    va = mb.submit(_mkq(db_a, 100), now=0.001, tenant="victim")
+    vb = mb.submit(_mkq(db_a, 101), now=0.001, tenant="victim")
+    assert len(mb) == 14 and mb.pending("victim") == 2
+    done1 = mb.poll(now=0.002)  # size-triggered service: ONE batch of 4
+    assert len(done1) == 4
+    if fair:
+        # both victim requests ride the first batch despite the backlog
+        assert va in done1 and vb in done1
+        assert [t for t in done1 if t.tenant == "noisy"][0].query.qid == 0
+    else:
+        # FIFO: the first batches are all noisy; victims wait out the backlog
+        assert va not in done1 and vb not in done1
+        for _ in range(2):
+            batch = mb.poll(now=0.003)
+            assert len(batch) == 4
+            assert all(t.tenant == "noisy" for t in batch)
+    mb.drain(now=0.01)
+    assert len(mb) == 0 and mb.stats.queries == 14
+    assert va.done and vb.done
+    stats = mb.stats.as_dict()
+    assert stats["tenant_queries"]["noisy"] == 12
+    assert stats["tenant_queries"]["victim"] == 2
+
+
+def test_drr_large_quantum_does_not_monopolize(db_a):
+    """Regression: a quantum >= max_batch must not let one backlogged
+    tenant monopolize every flush. A turn interrupted by a full batch
+    resumes with its LEFTOVER deficit only (no fresh credit), and a turn
+    that ends exactly at the cap rotates to the back of the ring."""
+    mb, orders = _backlog_batcher(fair=True)
+    mb.quantum = mb.max_batch  # 4: one tenant's round fills a whole batch
+    for i in range(8):
+        mb.submit(_mkq(db_a, i), now=0.0, tenant="a")
+    for i in range(8, 16):
+        mb.submit(_mkq(db_a, i), now=0.0, tenant="b")
+    for i in range(4):
+        mb.poll(now=0.001 * (i + 1))
+    # batches alternate full rounds: a, b, a, b — never a, a, a, a
+    assert [o[0][0] for o in orders] == ["a", "b", "a", "b"]
+    assert all(len({t for t, _ in o}) == 1 and len(o) == 4 for o in orders)
+
+
+def test_drr_work_conserving_single_tenant(db_a):
+    """With one tenant DRR degenerates to FIFO and batches stay full."""
+    mb, orders = _backlog_batcher(fair=True)
+    for i in range(8):
+        mb.submit(_mkq(db_a, i), now=0.0, tenant="only")
+    mb.poll(now=0.001)
+    mb.poll(now=0.002)
+    assert [q for _, q in orders[0]] == [0, 1, 2, 3]
+    assert [q for _, q in orders[1]] == [4, 5, 6, 7]
+
+
+# ---- tenant-skew trace ----------------------------------------------------
+
+
+def test_tenant_skew_trace_structure(db_a, db_b, wl_a, wl_b):
+    trace = tenant_skew_trace(db_a, {"a": wl_a, "b": wl_b}, n=80, qps=400.0,
+                              noisy="b", noisy_mult=6.0, seed=4,
+                              dbs={"b": db_b})
+    assert len(trace) == 80
+    ts = [tq.t for tq in trace]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))  # merged arrivals ordered
+    qids = [tq.query.qid for tq in trace]
+    assert len(set(qids)) == 80  # globally unique across tenants
+    by_tenant = {t: [tq for tq in trace if tq.tenant == t] for t in "ab"}
+    assert by_tenant["a"] and by_tenant["b"]
+    # the noisy tenant dominates arrivals thanks to its burst window
+    assert len(by_tenant["b"]) > len(by_tenant["a"])
+    # per-tenant vids come from that tenant's workload
+    assert {tq.query.vid for tq in by_tenant["b"]} <= {q.vid for q in wl_b.queries}
+    with pytest.raises(ValueError):
+        tenant_skew_trace(db_a, {"a": wl_a}, n=4, noisy="zz")
+
+
+# ---- acceptance: multi-tenant == two isolated single-tenant runs ----------
+
+
+def test_multitenant_bit_identical_to_isolated_runs(
+        db_a, db_b, wl_a, wl_b, mint_a, mint_b, cons_a, cons_b,
+        tuned_a, tuned_b):
+    """Two tenants with distinct workloads (and databases) served by one
+    MultiTenantRuntime — under a governor budget tight enough to force
+    evictions mid-trace — produce bit-identical per-query top-k ids to two
+    isolated single-tenant OnlineRuntime runs over the same queries."""
+    trace = tenant_skew_trace(db_a, {"a": wl_a, "b": wl_b}, n=48, qps=400.0,
+                              noisy="b", noisy_mult=5.0, seed=9,
+                              dbs={"b": db_b})
+    # budget below the working set of both tenants combined
+    budget = ColumnStore(db_a).device_bytes((0, 1, 2))
+    cfg = RuntimeConfig(max_batch=6, max_delay_ms=5.0)
+    mt = MultiTenantRuntime(
+        [Tenant("a", db_a, mint_a, wl_a, cons_a, result=tuned_a),
+         Tenant("b", db_b, mint_b, wl_b, cons_b, result=tuned_b)],
+        budget_bytes=budget, config=cfg)
+    tickets = mt.run_trace(trace)
+    assert all(t.done for t in tickets)
+    gov = mt.governor.stats()
+    assert gov["evictions"] >= 1  # the budget actually bit
+    assert gov["overcommits"] == 0
+    assert gov["peak_bytes"] <= budget  # device bytes never exceeded it
+
+    # isolated single-tenant reference runs (no drift/retune interference)
+    iso_ids: dict[int, np.ndarray] = {}
+    for name, db, mint, wl, cons, tuned in [
+            ("a", db_a, mint_a, wl_a, cons_a, tuned_a),
+            ("b", db_b, mint_b, wl_b, cons_b, tuned_b)]:
+        sub = [tq for tq in trace if tq.tenant == name]
+        iso = OnlineRuntime(db, mint, wl, cons, result=tuned,
+                            config=RuntimeConfig(max_batch=6,
+                                                 max_delay_ms=5.0,
+                                                 drift_threshold=2.0))
+        for t in iso.run_trace([TimedQuery(t=tq.t, query=tq.query)
+                                for tq in sub]):
+            iso_ids[t.query.qid] = np.asarray(t.ids)
+
+    for t in tickets:
+        np.testing.assert_array_equal(np.asarray(t.ids),
+                                      iso_ids[t.query.qid])
+
+
+def test_multitenant_swap_is_tenant_local(db_a, db_b, wl_a, wl_b, mint_a,
+                                          mint_b, cons_a, cons_b, tuned_a,
+                                          tuned_b):
+    mt = MultiTenantRuntime(
+        [Tenant("a", db_a, mint_a, wl_a, cons_a, result=tuned_a),
+         Tenant("b", db_b, mint_b, wl_b, cons_b, result=tuned_b)],
+        budget_bytes=50_000_000)
+    qb = make_queries(db_b, [(0, 1)], k=K, seed=11)[0]
+    mt.submit("b", qb, now=0.0)
+    mt.drain(now=0.1)
+    hits_before = mt.cache.stats()["hits"]
+    # re-tune tenant a only
+    new_a = mint_a.retune(wl_a, cons_a, warm_start=tuned_a)
+    mt.swap_tenant("a", new_a, wl_a, now=0.2)
+    assert mt.generation_of("a") == 1 and mt.generation_of("b") == 0
+    # b's templates survived a's swap: next b query is still a cache hit
+    qb2 = make_queries(db_b, [(0, 1)], k=K, seed=12)[0]
+    t = mt.submit("b", qb2, now=0.3)
+    mt.drain(now=0.4)
+    assert t.done and mt.cache.stats()["hits"] == hits_before + 1
+    # a's store was pruned to its new configuration; b's store untouched
+    assert set(mt.istores.get("a").built_specs()) <= set(new_a.configuration)
+    assert set(mt.istores.get("b").built_specs()) <= set(tuned_b.configuration)
+
+
+# ---- joint cross-tenant tuning --------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def joint_setup():
+    """Tenant a: three disjoint wide queries, each accelerated only by its
+    own narrow 16-d helper index (so a's cost ladder strictly drops through
+    budget 3); tenant b: one wide query needing a single helper (flat
+    ladder after 1). At global budget 4, equal split (2/2) starves one of
+    a's queries into a flat scan while joint allocation (3/1) serves
+    everyone indexed."""
+    db_a = make_database(1000, [("a16", 16), ("a64", 64), ("b16", 16),
+                                ("b64", 64), ("c16", 16), ("c64", 64)],
+                         seed=0)
+    db_b = make_database(800, [("x16", 16), ("x64", 64)], seed=7)
+    wa = _wl(db_a, [(0, 1), (2, 3), (4, 5)], seed=0)
+    wb = _wl(db_b, [(0, 1)], seed=1)
+    return {
+        "a": TenantTask(Mint(db_a, index_kind="ivf", seed=0,
+                             min_sample_rows=300), wa,
+                        Constraints(theta_recall=0.85, theta_storage=4)),
+        "b": TenantTask(Mint(db_b, index_kind="ivf", seed=0,
+                             min_sample_rows=300), wb,
+                        Constraints(theta_recall=0.85, theta_storage=2)),
+    }
+
+
+def test_tune_tenants_joint_beats_equal_split(joint_setup):
+    tasks = joint_setup
+    joint = tune_tenants(tasks, global_storage=4)
+    equal = tune_tenants(tasks, global_storage=4, equal_split=True)
+    assert joint.feasible
+    assert joint.total_storage <= 4
+    assert sum(joint.allocations.values()) <= 4
+    assert joint.total_cost < equal.total_cost  # strict: a was starved at 2
+    assert joint.allocations["a"] == 3 and joint.allocations["b"] == 1
+    # per-tenant recall feasibility at the allocated budgets
+    for name, task in tasks.items():
+        r = joint.results[name]
+        assert all(p.est_recall >= task.constraints.theta_recall - 1e-9
+                   for p in r.plans.values())
+    # the ladder cost curves are monotone non-increasing
+    for curve in joint.curves.values():
+        costs = [curve[b] for b in sorted(curve)]
+        assert all(b <= a + 1e-9 for a, b in zip(costs, costs[1:]))
+
+
+def test_tune_tenants_validation(mint_a, wl_a, cons_a):
+    with pytest.raises(ValueError):
+        tune_tenants({}, 4)
+    with pytest.raises(ValueError):
+        tune_tenants({"a": TenantTask(mint_a, wl_a, cons_a),
+                      "b": TenantTask(mint_a, wl_a, cons_a)}, 1)
+
+
+def test_runtime_tune_all_installs_joint_results(db_a, db_b, wl_a, wl_b,
+                                                 mint_a, mint_b, cons_a,
+                                                 cons_b, tuned_a, tuned_b):
+    mt = MultiTenantRuntime(
+        [Tenant("a", db_a, mint_a, wl_a, cons_a, result=tuned_a),
+         Tenant("b", db_b, mint_b, wl_b, cons_b, result=tuned_b)],
+        budget_bytes=50_000_000)
+    joint = mt.tune_all(global_storage=4)
+    assert set(joint.results) == {"a", "b"}
+    for tid in ("a", "b"):
+        assert mt.generation_of(tid) == 1  # every tenant swapped once
+        assert mt.state(tid).result is joint.results[tid]
+    # serving still works post-swap and respects the new configurations
+    q = make_queries(db_a, [(0,)], k=K, seed=13)[0]
+    t = mt.submit("a", q, now=0.0)
+    mt.drain(now=0.1)
+    assert t.done and t.ids is not None
+
+
+# ---- namespaced index registry --------------------------------------------
+
+
+def test_tenant_index_stores_namespacing(db_a, db_b):
+    reg = TenantIndexStores()
+    sa = reg.register("a", db_a, seed=0)
+    sb = reg.register("b", db_b, seed=0)
+    assert sa.namespace == "a" and sb.namespace == "b"
+    spec = IndexSpec(vid=(0,), kind="ivf")
+    ia = reg.index("a", spec)
+    ib = reg.index("b", spec)
+    assert ia is not ib  # same spec, different namespaces -> different index
+    assert reg.get("a") is sa and "a" in reg and reg.tenants() == ["a", "b"]
+    assert reg.drop("a", spec) and not reg.drop("a", spec)
+    assert sb.built_specs() == [spec]  # a's drop never touches b
+    with pytest.raises(ValueError):
+        reg.register("a", db_a)
+    assert reg.stats()["b"]["built"] == 1

@@ -1,10 +1,8 @@
 """Training substrate: optimizer, checkpointing, fault-tolerant loop."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_arch
 from repro.train import checkpoint as CKPT
