@@ -1,0 +1,33 @@
+"""Streaming mutation subsystem (DESIGN.md §9).
+
+Turns the static-snapshot server into a database: an LSM-style mutation
+layer over the immutable indexes —
+
+  - ``mutation``  : typed insert/delete/upsert batches + the LSN log;
+  - ``table``     : MutableTable — immutable base + delta rows +
+                    tombstones over stable item ids;
+  - ``delta``     : device-resident delta segments (brute-force scanned by
+                    the fused kernels) + the engine-facing MutationView;
+  - ``compactor`` : policy-triggered fold of delta + tombstones into a new
+                    base with shadow-built indexes and an atomic swap;
+  - ``drift``     : DataDriftDetector — delta fraction, cumulative churn,
+                    per-column centroid shift;
+  - ``runtime``   : IngestRuntime — OnlineRuntime + the mutation path and
+                    the data-side maintenance loop.
+"""
+from repro.ingest.compactor import (CompactionPolicy, CompactionStats,
+                                    Compactor)
+from repro.ingest.delta import DeltaSegments, MutationView
+from repro.ingest.drift import DataDriftDetector, DataDriftReport
+from repro.ingest.mutation import (DeleteBatch, InsertBatch, MutationLog,
+                                   UpsertBatch)
+from repro.ingest.runtime import (CompactionEvent, DataRetuneEvent,
+                                  IngestConfig, IngestRuntime)
+from repro.ingest.table import MutableTable
+
+__all__ = [
+    "CompactionEvent", "CompactionPolicy", "CompactionStats", "Compactor",
+    "DataDriftDetector", "DataDriftReport", "DataRetuneEvent", "DeleteBatch",
+    "DeltaSegments", "IngestConfig", "IngestRuntime", "InsertBatch",
+    "MutableTable", "MutationLog", "MutationView", "UpsertBatch",
+]

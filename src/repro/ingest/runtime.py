@@ -1,0 +1,265 @@
+"""Ingest-aware serving runtime: OnlineRuntime + streaming mutations.
+
+Closes the loop the ROADMAP called "retune under mutation" (DESIGN.md §9):
+
+  request path   : unchanged — plan cache → micro-batcher → BatchEngine;
+                   the engine serves (base + delta segments − tombstones)
+                   through its attached ``MutationView``, so new rows are
+                   visible at the next flush and deleted rows never
+                   surface.
+  mutation path  : ``mutate()`` applies a typed batch to the MutableTable
+                   under the batcher lock, so a mutation is ordered
+                   strictly between micro-batch flushes — every flushed
+                   batch executes against exactly one table version.
+  maintenance    : each ``tick()`` (after the query-drift retuner gets its
+                   chance) runs the data side —
+                     · ``DataDriftDetector`` fires → compact + retrain
+                       ``Mint`` on the materialized live table + retune +
+                       atomic swap (``data_retune``);
+                     · otherwise the ``Compactor`` policy fires → shadow
+                       build + atomic swap (``compact``).
+                   EVERY swap — compaction or retune — bumps the
+                   plan-cache generation: templates planned against the
+                   pre-swap snapshot can never serve the post-swap one.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace as dc_replace
+
+import numpy as np
+
+from repro.core.types import Constraints, TuningResult, Workload
+from repro.ingest.compactor import CompactionPolicy, Compactor
+from repro.ingest.delta import MutationView
+from repro.ingest.drift import DataDriftDetector, DataDriftReport
+from repro.ingest.mutation import (DeleteBatch, InsertBatch, UpsertBatch,
+                                   resolve_timed)
+from repro.ingest.table import MutableTable
+from repro.online.runtime import OnlineRuntime, RuntimeConfig
+from repro.online.trace import TimedMutation, TimedQuery
+from repro.serve.columnstore import ColumnStore
+
+
+@dataclass
+class IngestConfig:
+    """Maintenance knobs on top of ``RuntimeConfig``."""
+
+    policy: CompactionPolicy | None = None   # None -> CompactionPolicy()
+    delta_threshold: float = 0.25            # data drift: live delta share
+    churn_threshold: float = 0.3             # cumulative churn since rearm
+    shift_threshold: float = 0.15            # per-column centroid shift
+    min_mutated_rows: int = 64
+    data_cooldown_s: float = 60.0            # min spacing of data retunes
+    auto_maintain: bool = True               # tick() runs the data side
+
+
+@dataclass
+class CompactionEvent:
+    t: float
+    reason: str
+    generation: int            # plan-cache generation AFTER the swap
+    rows_before: int
+    rows_after: int
+    dead_reclaimed: int
+    delta_folded: int
+    build_seconds: float
+
+
+@dataclass
+class DataRetuneEvent:
+    t: float
+    reason: str
+    churn_fraction: float
+    max_shift: float
+    generation: int            # generation AFTER the final swap
+    config_before: int
+    config_after: int
+    est_cost_after: float
+    tune_seconds: float
+
+
+class IngestRuntime(OnlineRuntime):
+    """Serving facade over a MUTABLE table."""
+
+    def __init__(self, db, mint, workload: Workload, constraints: Constraints,
+                 result: TuningResult | None = None, store=None, engine=None,
+                 config: RuntimeConfig | None = None,
+                 ingest: IngestConfig | None = None,
+                 table: MutableTable | None = None):
+        super().__init__(db, mint, workload, constraints, result=result,
+                         store=store, engine=engine, config=config)
+        self.ingest = ingest or IngestConfig()
+        self.table = table if table is not None else MutableTable(db)
+        cs = self.engine.cstore
+        self.view = MutationView(self.table, block_rows=cs.block_rows,
+                                 block_dim=cs.block_dim)
+        self.engine.attach_mutations(self.view)
+        self.compactor = Compactor(self.table, policy=self.ingest.policy,
+                                   seed=mint.seed)
+        self.data_detector = DataDriftDetector(
+            self.table, delta_threshold=self.ingest.delta_threshold,
+            churn_threshold=self.ingest.churn_threshold,
+            shift_threshold=self.ingest.shift_threshold,
+            min_mutated_rows=self.ingest.min_mutated_rows)
+        self.compaction_events: list[CompactionEvent] = []
+        self.data_retune_events: list[DataRetuneEvent] = []
+        self._fallback_workload = workload
+        self._last_data_fire: float | None = None
+
+    # ---- mutation path ----------------------------------------------------
+
+    def mutate(self, mutation) -> tuple[int, np.ndarray]:
+        """Apply one typed mutation batch. Serialized against flushes by
+        the batcher lock: a queued micro-batch executes either entirely
+        before or entirely after this mutation, never across it."""
+        with self.batcher.lock:
+            return self.table.apply(mutation)
+
+    def insert(self, vectors) -> np.ndarray:
+        return self.mutate(InsertBatch(vectors))[1]
+
+    def delete(self, ids) -> int:
+        lsn, _ = self.mutate(DeleteBatch(np.asarray(ids)))
+        return lsn
+
+    def upsert(self, ids, vectors) -> np.ndarray:
+        return self.mutate(UpsertBatch(np.asarray(ids), vectors))[1]
+
+    def apply_timed(self, tm: TimedMutation) -> None:
+        """Resolve one trace mutation against the live table and apply it
+        (``ingest.mutation.resolve_timed``)."""
+        mutation = resolve_timed(self.table, tm)
+        if mutation is not None:
+            self.mutate(mutation)
+
+    # ---- serving loop -----------------------------------------------------
+
+    def tick(self, now: float | None = None):
+        now = time.time() if now is None else now
+        done = super().tick(now)
+        if self.ingest.auto_maintain:
+            self.maintain(now)
+        return done
+
+    def run_mixed_trace(self, events: list) -> list:
+        """Replay a churn trace (TimedQuery | TimedMutation, by arrival
+        time). Returns one completed ticket per QUERY in arrival order."""
+        tickets = []
+        for ev in events:
+            if isinstance(ev, TimedQuery):
+                tickets.append(self.submit(ev.query, ev.t))
+            else:
+                self.apply_timed(ev)
+            self.tick(ev.t)
+        last = events[-1].t if events else 0.0
+        self.drain(last)
+        self.retuner.join()
+        return tickets
+
+    # ---- maintenance ------------------------------------------------------
+
+    def maintain(self, now: float | None = None) -> None:
+        """One maintenance step: data-drift retune first (it compacts as
+        part of its swap — compacting separately would be wasted work),
+        else policy-triggered compaction."""
+        now = time.time() if now is None else now
+        report = self.data_detector.check()
+        if report.drifted and self._data_cooldown_ok(now):
+            self.data_retune(report, now)
+            return
+        reason = self.compactor.should_compact()
+        if reason is not None:
+            self.compact(reason=reason, now=now)
+
+    def _data_cooldown_ok(self, now: float) -> bool:
+        return (self._last_data_fire is None
+                or now - self._last_data_fire >= self.ingest.data_cooldown_s)
+
+    def compact(self, reason: str = "manual",
+                now: float | None = None) -> CompactionEvent:
+        """Fold delta + tombstones into a new base and atomically swap it
+        into serving. The batcher lock is held across build + drain +
+        install, so no mutation or flush can interleave with the fold (the
+        in-process analogue of a stop-the-world memtable rotation; an async
+        build would need log replay past the cut — see DESIGN.md §9)."""
+        now = time.time() if now is None else now
+        with self.batcher.lock:
+            state = self.compactor.build(self.result.configuration,
+                                         reason=reason)
+            self.batcher.drain(now)
+            with self._swap_lock:
+                self._install_compaction(state)
+        ev = CompactionEvent(
+            t=now, reason=reason, generation=self.cache.generation,
+            rows_before=state.stats.rows_before,
+            rows_after=state.stats.rows_after,
+            dead_reclaimed=state.stats.dead_reclaimed,
+            delta_folded=state.stats.delta_folded,
+            build_seconds=state.stats.build_seconds)
+        self.compaction_events.append(ev)
+        return ev
+
+    def _install_compaction(self, state) -> None:
+        """Caller holds batcher lock + swap lock. Order matters: the table
+        rebase and the engine store swap must land together — the engine's
+        MutationView reads the table, so a half-installed pair would mix
+        old physical ids with new stable mapping."""
+        self.table.rebase(state.db, state.ids, state.stats.upto_lsn)
+        self.view.segments.drop_all()   # release stale device deltas
+        cstore = state.cstore if state.cstore is not None \
+            else ColumnStore(state.db)
+        self.engine.swap_store(state.store, cstore, db=state.db)
+        self.db = state.db
+        self.store = state.store
+        # satellite fix: EVERY compaction/swap bumps the generation — plan
+        # templates created against the old snapshot (its physical layout,
+        # its n_rows cost terms) must not survive into the new one
+        self.cache.bump_generation()
+
+    def data_retune(self, report: DataDriftReport,
+                    now: float | None = None) -> DataRetuneEvent:
+        """Data drift: compact, retrain estimators on the live table, and
+        retune — the data-side analogue of the query-drift lifecycle."""
+        now = time.time() if now is None else now
+        self._last_data_fire = now
+        t0 = time.time()
+        with self.batcher.lock:
+            config_before = len(self.result.configuration)
+            self.compact(reason=f"data_drift ({report.reason})", now=now)
+            # rebuild the tuner over the compacted snapshot: estimators and
+            # the what-if sample must describe the LIVE data distribution
+            self.mint = dc_replace(self.mint, db=self.db, estimators=None,
+                                   _sample=None)
+            self.planner = self.mint.planner(self.constraints)
+            try:
+                observed = self.monitor.observed_workload()
+            except ValueError:  # nothing served yet: fall back to tuned mix
+                observed = self._fallback_workload
+            result = self.mint.retune(observed, self.constraints,
+                                      warm_start=self.result)
+            for spec in result.configuration:   # shadow build before swap
+                if spec not in self.store:
+                    self.store.get(spec)
+            self.swap(result, observed, now=now)
+            self.data_detector.rearm()
+        ev = DataRetuneEvent(
+            t=now, reason=report.reason or "data_drift",
+            churn_fraction=report.churn_fraction, max_shift=report.max_shift,
+            generation=self.cache.generation, config_before=config_before,
+            config_after=len(result.configuration),
+            est_cost_after=float(result.est_workload_cost),
+            tune_seconds=time.time() - t0)
+        self.data_retune_events.append(ev)
+        return ev
+
+    # ---- introspection ----------------------------------------------------
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["table"] = self.table.stats()
+        out["compactor"] = self.compactor.stats()
+        out["compactions"] = len(self.compaction_events)
+        out["data_retunes"] = len(self.data_retune_events)
+        out["data_drift"] = vars(self.data_detector.check())
+        return out

@@ -16,8 +16,14 @@ def _mask_pad_rows(scores: jnp.ndarray, valid_n: int) -> jnp.ndarray:
     return jnp.where(pad[None, :], NEG_INF, scores)
 
 
+@jax.jit
+def _mask_dead_rows(scores: jnp.ndarray, dead: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(dead[None, :], NEG_INF, scores)
+
+
 def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
                valid_n: int | None = None,
+               dead_mask: jnp.ndarray | None = None,
                interpret: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The TPU-native index scan: (B, d) queries over (N, d) rows -> top-k
     (values, indices). Composition of the MXU distance kernel and the
@@ -26,11 +32,21 @@ def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
 
     ``valid_n`` supports pre-padded device-resident databases (the serving
     column store): rows at index >= valid_n are padding and are masked to
-    -inf so they can never win a top-k slot; k is clamped to valid_n."""
+    -inf so they can never win a top-k slot; k is clamped to valid_n.
+
+    ``dead_mask`` is the mutation layer's tombstone bitmap — an (N,) device
+    bool array, True for deleted rows. Tombstoned rows are score-masked to
+    -inf between the distance and top-k kernels, so a deleted item can
+    never surface in a result: when fewer than k rows are alive, the tail
+    slots come back at NEG_INF and the caller drops them. The rows are
+    still scanned (cost accounting is unchanged) — reclaiming the scan work
+    itself is the compactor's job, not the mask's."""
     scores = batched_scores(q, db, metric=metric, interpret=interpret)
     if valid_n is not None and valid_n < db.shape[0]:
         scores = _mask_pad_rows(scores, int(valid_n))
         k = min(k, int(valid_n))
+    if dead_mask is not None:
+        scores = _mask_dead_rows(scores, dead_mask)
     return topk_scores(scores, k, interpret=interpret)
 
 

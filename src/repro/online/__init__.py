@@ -10,14 +10,16 @@ from repro.online.plancache import PlanCache
 from repro.online.retuner import BackgroundRetuner, RetuneEvent
 from repro.online.runtime import OnlineRuntime, RuntimeConfig
 from repro.online.scheduler import MicroBatcher, Ticket
-from repro.online.trace import (TimedQuery, burst_trace, diurnal_trace,
-                                hot_item_trace, make_trace, steady_trace,
+from repro.online.trace import (TimedMutation, TimedQuery, burst_trace,
+                                churn_trace, diurnal_trace, hot_item_trace,
+                                make_trace, row_batch, steady_trace,
                                 tenant_skew_trace)
 
 __all__ = [
     "BackgroundRetuner", "DriftDetector", "DriftReport", "MicroBatcher",
     "OnlineRuntime", "PlanCache", "RetuneEvent", "RuntimeConfig", "Ticket",
-    "TimedQuery", "WorkloadMonitor", "burst_trace", "diurnal_trace",
-    "hot_item_trace", "make_trace", "reference_histogram", "steady_trace",
-    "tenant_skew_trace", "total_variation",
+    "TimedMutation", "TimedQuery", "WorkloadMonitor", "burst_trace",
+    "churn_trace", "diurnal_trace", "hot_item_trace", "make_trace",
+    "reference_histogram", "row_batch", "steady_trace", "tenant_skew_trace",
+    "total_variation",
 ]

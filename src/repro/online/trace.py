@@ -16,7 +16,13 @@ with globally unique qids, at a fixed arrival rate (``qps``). Scenarios:
   - ``tenant_skew`` : multiple tenants' streams merged, each tagged with
                    its ``TenantId``; inside a window one "noisy" tenant's
                    arrival rate is multiplied while the victims keep their
-                   base rate (the noisy-neighbor isolation scenario).
+                   base rate (the noisy-neighbor isolation scenario);
+  - ``churn``    : queries interleaved with a mutation stream —
+                   ``TimedMutation`` events carrying insert batches (near-
+                   manifold rows), delete picks, and upserts at
+                   configurable rates (the ingest subsystem's scenario;
+                   ``repro.ingest.IngestRuntime.run_mixed_trace`` replays
+                   it).
 """
 from __future__ import annotations
 
@@ -35,6 +41,35 @@ class TimedQuery:
     t: float
     query: Query
     tenant: TenantId = DEFAULT_TENANT
+
+
+@dataclass
+class TimedMutation:
+    """One mutation event in a mixed trace. Inserts/upserts carry their
+    vectors (one block per column); deletes and upsert targets are resolved
+    against the LIVE table at apply time — the trace only pins the seeded
+    choice (``seed``) and how many rows to touch (``count``), because which
+    stable ids are alive depends on the mutations applied before this one."""
+
+    t: float
+    kind: str                    # "insert" | "delete" | "upsert"
+    count: int
+    vectors: list | None = None  # per-column blocks (insert / upsert)
+    seed: int = 0                # live-id pick for delete / upsert targets
+    tenant: TenantId = DEFAULT_TENANT
+
+
+def row_batch(db: MultiVectorDatabase, rng: np.random.Generator, n: int,
+              noise: float = 0.5,
+              source: MultiVectorDatabase | None = None) -> list:
+    """``n`` near-manifold full rows (every column) for an insert batch:
+    each row is a random ``source`` row plus per-column unit noise.
+    ``source`` defaults to ``db`` itself; pass a differently-distributed
+    database to generate data-drifting inserts."""
+    src = source if source is not None else db
+    rows = rng.integers(0, src.n_rows, size=n)
+    return [_normalize(col[rows] + _unit_noise(rng, (n, col.shape[1]), noise))
+            for col in src.columns]
 
 
 class _QueryFactory:
@@ -195,10 +230,71 @@ def tenant_skew_trace(db: MultiVectorDatabase,
     return out
 
 
+def churn_trace(db: MultiVectorDatabase, workload: Workload, n: int,
+                qps: float = 200.0, mutation_rate: float = 0.25,
+                batch: int = 8, mix: tuple = (0.5, 0.5, 0.0),
+                insert_noise: float = 0.5,
+                insert_source: MultiVectorDatabase | None = None,
+                query_drift: float = 0.0,
+                k: int | None = None, seed: int = 0, t0: float = 0.0,
+                qid_start: int = 0,
+                tenant: TenantId = DEFAULT_TENANT) -> list:
+    """Interleaved query + mutation stream (the ingest scenario).
+
+    ``n`` queries arrive at ``qps`` drawn from the workload's vid
+    histogram; mutation batches of ``batch`` rows arrive at
+    ``qps * mutation_rate`` with kinds drawn from ``mix`` (insert, delete,
+    upsert weights). Insert/upsert rows are near-manifold (``row_batch``);
+    pass ``insert_source`` to make the ingested data DRIFT away from the
+    base distribution (the data-drift benchmark's knob), and
+    ``query_drift`` > 0 to make queries FOLLOW it — query i lands near
+    ``insert_source`` rows with probability ramping 0 → ``query_drift``
+    over the trace, modeling traffic that chases freshly ingested content.
+    Delete/upsert targets are left as seeded live-id picks resolved at
+    apply time. Returns ``TimedQuery`` and ``TimedMutation`` events merged
+    by arrival time."""
+    if batch < 1:
+        raise ValueError("batch must be >= 1")
+    mix_arr = np.asarray(mix, dtype=np.float64)
+    if mix_arr.sum() <= 0 or (mix_arr < 0).any():
+        raise ValueError("mix must be non-negative with positive mass")
+    mix_arr = mix_arr / mix_arr.sum()
+    vids, probs = _workload_vids(workload)
+    k = k if k is not None else workload.queries[0].k
+    qids = itertools.count(qid_start)
+    fac = _QueryFactory(db, k, seed, qids=qids)
+    dfac = (_QueryFactory(insert_source, k, seed + 31, qids=qids)
+            if insert_source is not None and query_drift > 0 else None)
+    mrng = np.random.default_rng(seed + 7919)
+    kinds = ("insert", "delete", "upsert")
+    out: list = []
+    for i in range(n):
+        f = fac
+        if dfac is not None:
+            phase = i / max(n - 1, 1)
+            if fac.rng.random() < phase * query_drift:
+                f = dfac
+        vid = vids[int(f.rng.choice(len(vids), p=probs))]
+        out.append(TimedQuery(t=t0 + i / qps, query=f.make(vid),
+                              tenant=tenant))
+    n_mut = int(round(n * mutation_rate))
+    for m in range(n_mut):
+        t = t0 + (m + 0.5) / (qps * mutation_rate) if mutation_rate > 0 else t0
+        kind = kinds[int(mrng.choice(3, p=mix_arr))]
+        vecs = None
+        if kind in ("insert", "upsert"):
+            vecs = row_batch(db, mrng, batch, noise=insert_noise,
+                             source=insert_source)
+        out.append(TimedMutation(t=t, kind=kind, count=batch, vectors=vecs,
+                                 seed=seed * 100_003 + m, tenant=tenant))
+    out.sort(key=lambda e: (e.t, isinstance(e, TimedMutation)))
+    return out
+
+
 def make_trace(db: MultiVectorDatabase, scenario: str, **kw) -> list[TimedQuery]:
     gens = {"steady": steady_trace, "diurnal": diurnal_trace,
             "burst": burst_trace, "hot_item": hot_item_trace,
-            "tenant_skew": tenant_skew_trace}
+            "tenant_skew": tenant_skew_trace, "churn": churn_trace}
     if scenario not in gens:
         raise ValueError(f"unknown scenario {scenario!r}; "
                          f"choose from {sorted(gens)}")

@@ -21,6 +21,24 @@ per-query paths. Cost/recall accounting (``ExecutionMetrics`` /
 ``WorkloadMetrics``) follows ``core.tuner.execute_plan`` exactly: cost =
 Σ dim(x)·numDist + dim(q)·Σ ek (Eq. 4-6, duplicates counted), with wall
 time amortized over the group batch.
+
+Mutations (DESIGN.md §9): with a ``repro.ingest.MutationView`` attached,
+execution serves the LIVE table instead of the frozen snapshot —
+
+  - base scans thread the tombstone bitmap into ``fused_scan`` as a score
+    mask (deleted rows can never win a top-k slot; under a mesh they are
+    over-fetched and filtered on host instead);
+  - every index additionally brute-force scans the per-vid DELTA segment
+    (one extra batched dispatch per (group, index)) and merges base + delta
+    candidates by partial score with the canonical (score desc, stable id
+    asc) order — exactly the candidate list an index of the same kind
+    would produce over a from-scratch rebuild whenever its candidate
+    generation is exact (flat always; ANN kinds at exhaustive depth);
+  - all returned ids are STABLE item ids (``view.translate``), and the
+    rerank gathers each union id from whichever side — base column or
+    delta segment — physically holds it;
+  - recall ground truth comes from ``view.ground_truth`` (exact top-k over
+    live rows), not the frozen base.
 """
 from __future__ import annotations
 
@@ -36,27 +54,33 @@ from repro.data.vectors import MultiVectorDatabase
 from repro.index.base import exact_topk
 from repro.kernels.distance.kernel import batched_scores
 from repro.kernels.distance.ops import fused_scan
+from repro.kernels.topk.kernel import NEG_INF
 from repro.serve.columnstore import ColumnStore, DeviceColumn
-from repro.serve.compiler import PlanGroup, compile_batch
+from repro.serve.compiler import PlanGroup, compile_batch, ek_bucket
+
+# scores below this are masked tombstones / padding — never real candidates
+_DEAD_CUT = NEG_INF / 2
 
 
 @dataclass
 class DispatchCounters:
     """Kernel-dispatch accounting: ``scan`` counts ONE per (group, index)
-    batched dispatch (flat fused_scan or IVF probe), ``rerank`` one per
+    batched dispatch (flat fused_scan or IVF probe), ``delta`` one per
+    (group, index) delta-segment scan (mutation layer), ``rerank`` one per
     group needing the union rerank, ``fallback`` one per per-query graph
     search that could not be batched."""
 
     scan: int = 0
+    delta: int = 0
     rerank: int = 0
     fallback: int = 0
 
     def reset(self) -> None:
-        self.scan = self.rerank = self.fallback = 0
+        self.scan = self.delta = self.rerank = self.fallback = 0
 
     def as_dict(self) -> dict:
-        return {"scan": self.scan, "rerank": self.rerank,
-                "fallback": self.fallback}
+        return {"scan": self.scan, "delta": self.delta,
+                "rerank": self.rerank, "fallback": self.fallback}
 
 
 @jax.jit
@@ -89,19 +113,44 @@ class BatchEngine:
         self.cstore = cstore or ColumnStore(db, mesh=self.mesh, axis=axis)
         self.interpret = interpret
         self.counters = DispatchCounters()
+        self.mview = None  # repro.ingest.MutationView when mutations flow
         self._dist_steps: dict[tuple, object] = {}
 
     # ---- public API -------------------------------------------------------
 
-    def swap_store(self, store, cstore: ColumnStore | None = None) -> None:
+    def swap_store(self, store, cstore: ColumnStore | None = None,
+                   db: MultiVectorDatabase | None = None) -> None:
         """Swap hook for the online runtime's drift → retune → swap
         lifecycle: replace the index store (and optionally the column
-        store, when the underlying database itself changed). Cached
-        distributed search steps are keyed by shape only, so they survive
-        a store swap; the column store is reused unless replaced."""
+        store and database, when the underlying table itself changed —
+        e.g. a compaction folded delta segments into a new base). Cached
+        distributed search steps are keyed by (k, n_rows), so they survive
+        an index-store-only swap; replacing the column store / database
+        invalidates them (compactions change n_rows every time — keeping
+        stale shapes would leak one compiled step per row-count)."""
         self.store = store
         if cstore is not None:
             self.cstore = cstore
+        if db is not None:
+            self.db = db
+        if cstore is not None or db is not None:
+            self._dist_steps.clear()
+
+    def attach_mutations(self, view) -> None:
+        """Attach a ``repro.ingest.MutationView``: scans mask tombstoned
+        rows, delta segments are scanned and merged, and returned ids are
+        STABLE item ids (identical to base physical rows until the first
+        compaction rebases the table)."""
+        self.mview = view
+
+    def detach_mutations(self) -> None:
+        self.mview = None
+
+    def _mv(self):
+        """The active mutation view, or None when the attached table is
+        still bit-identical to the frozen snapshot (fast path)."""
+        mv = self.mview
+        return mv if mv is not None and mv.mutated() else None
 
     def search_batch(self, pairs: list[tuple[Query, QueryPlan]]) -> list[np.ndarray]:
         """Serving form: top-k ids per query, in batch order."""
@@ -158,17 +207,34 @@ class BatchEngine:
         costs = [0.0] * B
         ndists = [0] * B
         eks_maps: list[dict] = [{} for _ in range(B)]
+        mv = self._mv()
 
         if not specs:  # flat-scan fallback group (no useful index / all ek=0)
             col = self.cstore.device(group.key.vid)
             qmat = col.pad_queries(
                 np.stack([it.query.concat() for it in items]))
-            ids = self._flat_scan(col, qmat, min(group.max_k, col.n_rows))
+            if mv is None:
+                ids = self._flat_scan(col, qmat, min(group.max_k, col.n_rows))
+                out_ids = []
+                for i, it in enumerate(items):
+                    out_ids.append(ids[i, : min(it.query.k, col.n_rows)])
+                    costs[i] = float(it.query.dim() * col.n_rows)
+                    ndists[i] = col.n_rows
+                return out_ids, costs, ndists, eks_maps
+            # mutated table: masked base scan + delta scan, merged exactly
+            bs, bids = self._base_scan_mv(mv, col, qmat,
+                                          min(group.max_k, col.n_rows))
+            ds, dids, n_delta = self._delta_scan(
+                mv, group.key.vid, items, group.max_k)
             out_ids = []
             for i, it in enumerate(items):
-                out_ids.append(ids[i, : min(it.query.k, col.n_rows)])
-                costs[i] = float(it.query.dim() * col.n_rows)
-                ndists[i] = col.n_rows
+                k_i = min(it.query.k, mv.n_live)
+                out_ids.append(self._merge_scored(
+                    bs[i], bids[i],
+                    None if ds is None else ds[i],
+                    None if ds is None else dids[i], k_i))
+                costs[i] = float(it.query.dim() * (col.n_rows + n_delta))
+                ndists[i] = col.n_rows + n_delta
             return out_ids, costs, ndists, eks_maps
 
         cand: list[list[np.ndarray]] = [[np.empty(0, np.int64)] * len(specs)
@@ -177,31 +243,61 @@ class BatchEngine:
             kind = spec.kind if self.store is not None else "flat"
             for i, it in enumerate(items):
                 eks_maps[i][spec.name] = it.eks[j]
+            # with mutations, every branch produces best-first SCORED
+            # candidates (stable ids) instead of writing cand directly;
+            # the delta merge below finalizes cand[i][j]
+            scored: list | None = [None] * B if mv is not None else None
             if kind == "ivf":
-                self._ivf_scan(group, spec, j, cand, costs, ndists)
+                self._ivf_scan(group, spec, j, cand, costs, ndists,
+                               mv=mv, scored=scored)
             elif kind == "flat":
                 col = self.cstore.device(spec.vid)
                 qmat = col.pad_queries(
                     np.stack([it.query.concat(spec.vid) for it in items]))
-                ids = self._flat_scan(col, qmat, min(bucket, col.n_rows))
-                for i, it in enumerate(items):
-                    cand[i][j] = ids[i, : min(it.eks[j], col.n_rows)]
-                    costs[i] += float(col.dim * col.n_rows)
-                    ndists[i] += col.n_rows
+                if mv is None:
+                    ids = self._flat_scan(col, qmat, min(bucket, col.n_rows))
+                    for i, it in enumerate(items):
+                        cand[i][j] = ids[i, : min(it.eks[j], col.n_rows)]
+                        costs[i] += float(col.dim * col.n_rows)
+                        ndists[i] += col.n_rows
+                else:
+                    s, stable = self._base_scan_mv(
+                        mv, col, qmat, min(bucket, col.n_rows))
+                    for i, it in enumerate(items):
+                        scored[i] = (stable[i], s[i])
+                        costs[i] += float(col.dim * col.n_rows)
+                        ndists[i] += col.n_rows
             else:  # graph kinds: sequential walks — per-query fallback
                 idx = self.store.get(spec)
                 for i, it in enumerate(items):
                     res = idx.search(it.query.concat(spec.vid), it.eks[j])
-                    cand[i][j] = res.ids
+                    if mv is None:
+                        cand[i][j] = res.ids
+                    else:  # drop tombstoned walk results, go stable
+                        alive = mv.table.base_alive[res.ids]
+                        scored[i] = (mv.translate(res.ids[alive]),
+                                     res.scores[alive])
                     costs[i] += float(idx.dim * res.num_dist)
                     ndists[i] += res.num_dist
                     self.counters.fallback += 1
+            if mv is not None:
+                ds, dids, n_delta = self._delta_scan(
+                    mv, spec.vid, items, bucket)
+                for i, it in enumerate(items):
+                    sids, s = scored[i]
+                    cand[i][j] = self._merge_scored(
+                        s, sids, None if ds is None else ds[i],
+                        None if ds is None else dids[i], it.eks[j])
+                    if n_delta:
+                        d = self.db.dim(spec.vid)
+                        costs[i] += float(d * n_delta)
+                        ndists[i] += n_delta
 
         if group.single_exact:  # scan output is the full-score order already
             out_ids = [cand[i][0][: items[i].query.k] for i in range(B)]
             return out_ids, costs, ndists, eks_maps
 
-        out_ids = self._rerank(group, cand)
+        out_ids = self._rerank(group, cand, mv=mv)
         for i, it in enumerate(items):
             total_ek = int(sum(it.eks))  # duplicates counted — Eq. 6
             costs[i] += float(it.query.dim() * total_ek)
@@ -221,24 +317,98 @@ class BatchEngine:
         return batched_scores(qmat, sub, interpret=False)
 
     def _flat_scan(self, col: DeviceColumn, qmat: jnp.ndarray, k: int) -> np.ndarray:
-        self.counters.scan += 1
+        return self._flat_scan_scored(col, qmat, k)[1]
+
+    def _flat_scan_scored(self, col: DeviceColumn, qmat: jnp.ndarray, k: int,
+                          dead_mask=None, counter: str = "scan"
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """One batched flat dispatch -> (scores, ids), best-first. The
+        tombstone ``dead_mask`` is threaded into ``fused_scan`` (masked rows
+        come back at -inf and are dropped by the merge); the distributed
+        step has no mask argument, so mesh callers over-fetch instead."""
+        setattr(self.counters, counter, getattr(self.counters, counter) + 1)
         if self.mesh is not None:
             key = (k, col.n_rows)
             if key not in self._dist_steps:
                 from repro.search.distributed import make_search_step
                 self._dist_steps[key] = make_search_step(
                     self.mesh, k=k, axis=self.axis, valid_n=col.n_rows)
-            _, ids = self._dist_steps[key](col.data, qmat)
+            vals, ids = self._dist_steps[key](col.data, qmat)
         else:
-            _, ids = fused_scan(qmat, col.data, k=k, valid_n=col.n_rows,
-                                interpret=self.interpret)
-        return np.asarray(ids)
+            vals, ids = fused_scan(qmat, col.data, k=k, valid_n=col.n_rows,
+                                   dead_mask=dead_mask,
+                                   interpret=self.interpret)
+        return np.asarray(vals), np.asarray(ids)
 
-    def _ivf_scan(self, group: PlanGroup, spec, j: int, cand, costs, ndists):
+    # ---- mutation-aware scanning (repro.ingest) ---------------------------
+
+    def _base_scan_mv(self, mv, col: DeviceColumn, qmat: jnp.ndarray,
+                      depth: int) -> tuple[np.ndarray, np.ndarray]:
+        """Masked base scan under mutations -> (scores, STABLE ids). Under
+        a mesh the distributed step cannot mask, so the scan over-fetches
+        ``depth + n_dead`` (bucketed to bound recompiles) and tombstones
+        are score-killed on host — both paths return the exact alive
+        top-``depth``."""
+        dead = mv.base_dead_mask(int(col.data.shape[0]))
+        if self.mesh is None or dead is None:
+            s, ids = self._flat_scan_scored(col, qmat,
+                                            min(depth, col.n_rows),
+                                            dead_mask=dead)
+        else:
+            k_eff = min(ek_bucket(depth + mv.n_dead_base), col.n_rows)
+            s, ids = self._flat_scan_scored(col, qmat, k_eff)
+            alive = mv.table.base_alive[ids]
+            s = np.where(alive, s, NEG_INF).astype(np.float32)
+        return s, mv.translate(ids)
+
+    def _delta_scan(self, mv, vid, items, depth: int):
+        """Brute-force delta-segment scan for one (group, index): one
+        batched dispatch over the padded delta matrix -> (scores, STABLE
+        ids, n_delta_rows); (None, None, 0) when the table has no delta.
+        Under a mesh the dispatch cannot mask, so tombstoned delta rows
+        are score-killed on host instead (delta arrays are small)."""
+        dcol = mv.delta(vid)
+        if dcol is None:
+            return None, None, 0
+        qmat = dcol.col.pad_queries(
+            np.stack([it.query.concat(vid) for it in items]))
+        k_eff = min(depth, dcol.n_rows)
+        if self.mesh is not None and not dcol.alive.all():
+            # the distributed step cannot mask: over-fetch past the dead
+            # rows, then score-kill them on host (delta arrays are small)
+            k_eff = min(depth + int((~dcol.alive).sum()), dcol.n_rows)
+        s, ids = self._flat_scan_scored(dcol.col, qmat, k_eff,
+                                        dead_mask=dcol.dead_mask,
+                                        counter="delta")
+        if self.mesh is not None and not dcol.alive.all():
+            s = np.where(dcol.alive[ids], s, NEG_INF).astype(np.float32)
+        return s, dcol.ids[ids], dcol.n_rows
+
+    @staticmethod
+    def _merge_scored(s_base, ids_base, s_delta, ids_delta, k: int) -> np.ndarray:
+        """Best-first merge of scored candidate lists in the canonical
+        rebuild order — score desc, stable id asc (a materialized rebuild
+        lays rows out by ascending stable id, so its scan breaks ties the
+        same way). Masked tombstones/padding (-inf) are dropped."""
+        if s_delta is not None:
+            s = np.concatenate([s_base, s_delta])
+            ids = np.concatenate([ids_base, ids_delta])
+        else:
+            s, ids = s_base, ids_base
+        keep = s > _DEAD_CUT
+        s, ids = s[keep], ids[keep]
+        order = np.lexsort((ids, -s))[:k]
+        return ids[order].astype(np.int64)
+
+    def _ivf_scan(self, group: PlanGroup, spec, j: int, cand, costs, ndists,
+                  mv=None, scored=None):
         """Batched IVF probe: one centroid-scoring dispatch for the whole
         group, then one gathered-row scoring dispatch over the padded probe
         union. Per-query nprobe / top-ek use each query's ACTUAL ek so the
-        results match ``IVFFlatIndex.search`` exactly."""
+        results match ``IVFFlatIndex.search`` exactly. Under mutations
+        (``mv``), tombstoned rows are score-killed before selection and the
+        surviving candidates land in ``scored`` as (stable ids, scores) for
+        the delta merge."""
         idx = self.store.get(spec)
         items = group.items
         col = self.cstore.device(spec.vid)
@@ -269,19 +439,33 @@ class BatchEngine:
         scores = np.asarray(_gather_scores(col.data, jnp.asarray(rows_mat), qmat))
         for i, (it, rows) in enumerate(zip(items, rows_list)):
             if rows.shape[0] == 0:
-                cand[i][j] = np.empty(0, np.int64)
+                if scored is not None:
+                    scored[i] = (np.empty(0, np.int64),
+                                 np.empty(0, np.float32))
+                else:
+                    cand[i][j] = np.empty(0, np.int64)
                 continue
             s = scores[i, : rows.shape[0]]
+            if mv is not None:  # tombstones: dead probe rows never rank
+                s = np.where(mv.table.base_alive[rows], s,
+                             NEG_INF).astype(np.float32)
             ek = min(it.eks[j], rows.shape[0])
             part = np.argpartition(-s, ek - 1)[:ek]
             order = np.argsort(-s[part], kind="stable")
-            cand[i][j] = rows[part[order]]
+            sel = part[order]
+            if scored is not None:
+                keep = s[sel] > _DEAD_CUT
+                scored[i] = (mv.translate(rows[sel][keep]), s[sel][keep])
+            else:
+                cand[i][j] = rows[sel]
 
-    def _rerank(self, group: PlanGroup, cand) -> list[np.ndarray]:
+    def _rerank(self, group: PlanGroup, cand, mv=None) -> list[np.ndarray]:
         """Full-score rerank over each query's candidate union, batched as
         ONE ``batched_scores`` dispatch over the group-wide union; per-query
         selection slices its own candidates (sorted ids + stable ordering —
-        the same tie-breaking as the per-query numpy path)."""
+        the same tie-breaking as the per-query numpy path). Under mutations
+        the union holds stable ids and each is gathered from whichever side
+        (base column / delta segment) physically stores it."""
         items = group.items
         col = self.cstore.device(group.key.vid)
         unions = []
@@ -294,8 +478,11 @@ class BatchEngine:
             return [np.empty(0, np.int64) for _ in items]
         gunion = np.unique(np.concatenate(nonempty))
         qmat = col.pad_queries(np.stack([it.query.concat() for it in items]))
-        sub = col.data[jnp.asarray(gunion.astype(np.int32))]
-        scores = np.asarray(self._batched_scores(qmat, sub))
+        if mv is None:
+            sub = col.data[jnp.asarray(gunion.astype(np.int32))]
+            scores = np.asarray(self._batched_scores(qmat, sub))
+        else:
+            scores = self._mv_union_scores(mv, group, col, qmat, gunion)
         self.counters.rerank += 1
         out = []
         for i, it in enumerate(items):
@@ -308,6 +495,28 @@ class BatchEngine:
             out.append(unions[i][top])
         return out
 
+    def _mv_union_scores(self, mv, group: PlanGroup, col: DeviceColumn,
+                         qmat: jnp.ndarray, gunion: np.ndarray) -> np.ndarray:
+        """Rerank scores for a STABLE-id union: base-located ids gather
+        from the resident base column (one dispatch), delta-located from
+        the delta segment (one more). Score values are bit-identical to a
+        rebuild's single gather — each row's dot product only sees its own
+        (identically padded) values."""
+        is_delta, phys = mv.locate(gunion)
+        out = np.empty((qmat.shape[0], gunion.shape[0]), dtype=np.float32)
+        bpos = np.nonzero(~is_delta)[0]
+        if bpos.size:
+            sub = col.data[jnp.asarray(phys[bpos].astype(np.int32))]
+            out[:, bpos] = np.asarray(self._batched_scores(qmat, sub))
+        dpos = np.nonzero(is_delta)[0]
+        if dpos.size:
+            dcol = mv.delta(group.key.vid)
+            qd = dcol.col.pad_queries(
+                np.stack([it.query.concat() for it in group.items]))
+            sub = dcol.col.data[jnp.asarray(phys[dpos].astype(np.int32))]
+            out[:, dpos] = np.asarray(self._batched_scores(qd, sub))
+        return out
+
     def _group_ground_truth(self, group: PlanGroup, gt_cache):
         items = group.items
         missing = [i for i, it in enumerate(items)
@@ -316,6 +525,11 @@ class BatchEngine:
             None if gt_cache is None else gt_cache.get(it.query.qid)
             for it in items]
         if missing:
+            mv = self._mv()
+            if mv is not None:  # oracle over the LIVE table, stable ids
+                for i in missing:
+                    gts[i] = mv.ground_truth(items[i].query)
+                return gts
             data = self.cstore.host(group.key.vid)
             for i in missing:
                 q = items[i].query

@@ -40,6 +40,7 @@ class MemoryGovernor:
         self.budget_bytes = int(budget_bytes)
         self.default_quota_bytes = default_quota_bytes
         self._stores: dict[TenantId, object] = {}   # tenant -> column store
+        self._delta_stores: dict[TenantId, object] = {}  # tenant -> segments
         self._quota: dict[TenantId, int | None] = {}
         self._lru: OrderedDict[_Key, int] = OrderedDict()  # key -> nbytes
         self._tenant_bytes: dict[TenantId, int] = {}
@@ -63,6 +64,27 @@ class MemoryGovernor:
             self._quota[tenant] = (quota_bytes if quota_bytes is not None
                                    else self.default_quota_bytes)
             self._tenant_bytes.setdefault(tenant, 0)
+
+    def register_delta(self, tenant: TenantId, segments) -> None:
+        """Attach a tenant's delta-segment cache (``ingest.DeltaSegments``).
+        Delta uploads are charged under keys ``("delta",) + vid`` against
+        the SAME tenant quota and global budget as resident base columns —
+        a tenant's mutation stream competes with its own hot columns for
+        device bytes, exactly like its base data does."""
+        with self._lock:
+            self._delta_stores[tenant] = segments
+
+    def rebind(self, tenant: TenantId, store) -> None:
+        """Point an existing registration at a replacement column store
+        (post-compaction swap); quota and accounting carry over, stale
+        residency of the OLD store is released."""
+        with self._lock:
+            if tenant not in self._stores:
+                raise KeyError(f"tenant {tenant!r} not registered")
+            for key in [k for k in self._lru
+                        if k[0] == tenant and k[1] and k[1][0] != "delta"]:
+                self.release(*key)
+            self._stores[tenant] = store
 
     def quota(self, tenant: TenantId) -> int | None:
         return self._quota.get(tenant, self.default_quota_bytes)
@@ -126,7 +148,12 @@ class MemoryGovernor:
             self._evict(victim_tenant, victim_vid)
 
     def _evict(self, tenant: TenantId, vid: Vid) -> None:
-        store = self._stores.get(tenant)
+        # delta-segment keys are namespaced ("delta",) + vid and owned by
+        # the tenant's DeltaSegments cache, not its column store
+        if vid and vid[0] == "delta":
+            store = self._delta_stores.get(tenant)
+        else:
+            store = self._stores.get(tenant)
         self.evictions += 1
         if store is not None:
             # evict_device() reports back through release(); RLock makes the

@@ -21,17 +21,22 @@ them without letting them observe each other —
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 
 from repro.core.tuner import (JointTuningResult, Mint, TenantTask,
                               tune_tenants)
 from repro.core.types import (Constraints, Query, QueryPlan, TenantId,
                               TuningResult, Workload)
 from repro.data.vectors import MultiVectorDatabase
+from repro.ingest.compactor import (CompactionPolicy, CompactionStats,
+                                    Compactor)
+from repro.ingest.delta import MutationView
+from repro.ingest.drift import DataDriftDetector
+from repro.ingest.table import MutableTable
 from repro.online.plancache import PlanCache, constraints_fingerprint
 from repro.online.runtime import RuntimeConfig
 from repro.online.scheduler import MicroBatcher, Ticket
-from repro.online.trace import TimedQuery
+from repro.online.trace import TimedMutation, TimedQuery
 from repro.serve.engine import BatchEngine
 from repro.tenancy.governor import MemoryGovernor
 from repro.tenancy.stores import TenantColumnStores, TenantIndexStores
@@ -65,6 +70,11 @@ class _TenantState:
             spec.tenant_id, spec.db, seed=spec.mint.seed)
         self.engine = BatchEngine(spec.db, store=self.store,
                                   cstore=self.cstore)
+        # ingest state (enable_ingest): per-tenant mutation stream
+        self.table: MutableTable | None = None
+        self.view: MutationView | None = None
+        self.compactor: Compactor | None = None
+        self.detector: DataDriftDetector | None = None
 
 
 def _no_default_plan(query: Query) -> QueryPlan:
@@ -136,14 +146,121 @@ class MultiTenantRuntime:
         return self.batcher.drain(now)
 
     def run_trace(self, trace: list[TimedQuery]) -> list[Ticket]:
-        """Replay a tenant-tagged trace in virtual time; one completed
-        ticket per query, arrival order."""
-        tickets = [None] * len(trace)
-        for i, tq in enumerate(trace):
-            tickets[i] = self.submit(tq.tenant, tq.query, tq.t)
+        """Replay a tenant-tagged trace in virtual time (mutation events
+        allowed for ingest-enabled tenants); one completed ticket per
+        QUERY, arrival order."""
+        tickets = []
+        for tq in trace:
+            if isinstance(tq, TimedMutation):
+                self.apply_timed(tq)
+            else:
+                tickets.append(self.submit(tq.tenant, tq.query, tq.t))
             self.tick(tq.t)
         self.drain(trace[-1].t if trace else 0.0)
-        return tickets  # type: ignore[return-value]
+        return tickets
+
+    # ---- mutation path (per-tenant ingest) --------------------------------
+
+    def enable_ingest(self, tenant: TenantId,
+                      policy: CompactionPolicy | None = None,
+                      drift_kw: dict | None = None) -> MutableTable:
+        """Open a mutation stream for one tenant: its engine serves
+        (base + delta − tombstones) through a MutationView whose
+        delta-segment bytes are charged to this tenant by the shared
+        MemoryGovernor — a churning tenant's deltas compete with its own
+        resident columns under its quota, not with its neighbors'."""
+        st = self._tenants[tenant]
+        if st.table is not None:
+            raise ValueError(f"tenant {tenant!r} already has ingest enabled")
+        st.table = MutableTable(st.spec.db)
+        st.view = MutationView(st.table, block_rows=st.cstore.block_rows,
+                               block_dim=st.cstore.block_dim,
+                               governor=self.governor, tenant=tenant)
+        self.governor.register_delta(tenant, st.view.segments)
+        st.engine.attach_mutations(st.view)
+        st.compactor = Compactor(st.table, policy=policy,
+                                 seed=st.spec.mint.seed,
+                                 builder_kwargs={"namespace": tenant})
+        st.detector = DataDriftDetector(st.table, **(drift_kw or {}))
+        return st.table
+
+    def _ingest_state(self, tenant: TenantId) -> _TenantState:
+        st = self._tenants[tenant]
+        if st.table is None:
+            raise ValueError(f"tenant {tenant!r} has no ingest stream "
+                             "(call enable_ingest first)")
+        return st
+
+    def mutate(self, tenant: TenantId, mutation):
+        """Apply one typed mutation batch to a tenant's table, serialized
+        against flushes (same ordering rule as single-tenant ingest)."""
+        st = self._ingest_state(tenant)
+        with self.batcher.lock:
+            return st.table.apply(mutation)
+
+    def apply_timed(self, tm: TimedMutation) -> None:
+        """Resolve one churn-trace mutation against its tenant's table and
+        apply it (``ingest.mutation.resolve_timed``)."""
+        from repro.ingest.mutation import resolve_timed
+        st = self._ingest_state(tm.tenant)
+        mutation = resolve_timed(st.table, tm)
+        if mutation is not None:
+            self.mutate(tm.tenant, mutation)
+
+    def compact_tenant(self, tenant: TenantId, reason: str = "manual",
+                       now: float | None = None) -> CompactionStats:
+        """Fold one tenant's delta + tombstones into a new base and swap it
+        in atomically: drain in-flight batches, rebase the table, replace
+        its governed column store + index store (old residency released by
+        the governor), and bump THIS tenant's plan-cache generation — every
+        compaction/swap bumps it, not just retunes, so a stale template can
+        never reference the pre-compaction snapshot (or its tombstoned
+        rows). Other tenants' stores and generations are untouched."""
+        st = self._ingest_state(tenant)
+        with self.batcher.lock:
+            state = st.compactor.build(st.result.configuration,
+                                       reason=reason, make_cstore=False)
+            self.batcher.drain(now)
+            st.table.rebase(state.db, state.ids, state.stats.upto_lsn)
+            st.view.segments.drop_all()
+            st.cstore = self.cstores.replace(tenant, state.db)
+            st.store = self.istores.replace(tenant, state.store)
+            st.engine.swap_store(state.store, st.cstore, db=state.db)
+            # future (re)tunes must see the LIVE data: rebind the tenant's
+            # tuner to the compacted snapshot (estimators retrain lazily)
+            st.spec.mint = dc_replace(st.spec.mint, db=state.db,
+                                      estimators=None, _sample=None)
+            st.spec.db = state.db
+            st.planner = st.spec.mint.planner(st.spec.constraints)
+            self.cache.bump_generation(tenant)
+        return state.stats
+
+    def maintain_tenant(self, tenant: TenantId,
+                        now: float | None = None) -> str | None:
+        """One data-side maintenance step for a tenant: data-drift retune
+        (compact + retrain + retune + swap) when its detector fires, else
+        policy-triggered compaction. Returns what happened (or None)."""
+        st = self._ingest_state(tenant)
+        report = st.detector.check()
+        if report.drifted:
+            self.compact_tenant(tenant,
+                                reason=f"data_drift ({report.reason})",
+                                now=now)
+            st = self._tenants[tenant]
+            result = st.spec.mint.retune(st.spec.workload,
+                                         st.spec.constraints,
+                                         warm_start=st.result)
+            for spec in result.configuration:  # shadow build before swap
+                if spec not in st.store:
+                    st.store.get(spec)
+            self.swap_tenant(tenant, result, st.spec.workload, now=now)
+            st.detector.rearm()
+            return "retuned"
+        trigger = st.compactor.should_compact()
+        if trigger is not None:
+            self.compact_tenant(tenant, reason=trigger, now=now)
+            return "compacted"
+        return None
 
     # ---- control path -----------------------------------------------------
 
@@ -195,7 +312,8 @@ class MultiTenantRuntime:
                       "dispatches": st.engine.counters.as_dict(),
                       "store": st.store.stats(),
                       "resident_vids": st.cstore.resident(),
-                      "device_bytes": self.governor.tenant_bytes(tid)}
+                      "device_bytes": self.governor.tenant_bytes(tid),
+                      "table": st.table.stats() if st.table else None}
                 for tid, st in sorted(self._tenants.items())
             },
         }

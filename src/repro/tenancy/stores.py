@@ -67,6 +67,18 @@ class TenantColumnStores:
     def get(self, tenant: TenantId) -> GovernedColumnStore:
         return self._stores[tenant]
 
+    def replace(self, tenant: TenantId, db: MultiVectorDatabase,
+                **kw) -> GovernedColumnStore:
+        """Swap a registered tenant onto a new database (post-compaction):
+        a fresh governed store under the same quota; the old store's
+        residency accounting is released by ``governor.rebind``."""
+        if tenant not in self._stores:
+            raise ValueError(f"tenant {tenant!r} not registered")
+        store = GovernedColumnStore(db, self.governor, tenant=tenant, **kw)
+        self.governor.rebind(tenant, store)
+        self._stores[tenant] = store
+        return store
+
     def __contains__(self, tenant: TenantId) -> bool:
         return tenant in self._stores
 
@@ -90,6 +102,14 @@ class TenantIndexStores:
 
     def get(self, tenant: TenantId) -> IndexStore:
         return self._stores[tenant]
+
+    def replace(self, tenant: TenantId, store: IndexStore) -> IndexStore:
+        """Swap a registered tenant onto a shadow-built store (compaction:
+        the new base's indexes were built off the serving path)."""
+        if tenant not in self._stores:
+            raise ValueError(f"tenant {tenant!r} not registered")
+        self._stores[tenant] = store
+        return store
 
     def index(self, tenant: TenantId, spec: IndexSpec):
         """Namespaced index lookup: (tenant, spec) -> built index."""

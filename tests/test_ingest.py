@@ -1,0 +1,489 @@
+"""Streaming mutation subsystem tests (DESIGN.md §9): mutation log +
+mutable table bookkeeping, delta segments under the memory governor,
+tombstone visibility, compaction triggers and swaps, data-drift detection
+and retune — and the ACCEPTANCE property: search over (base + delta
+segments + tombstones) is bit-identical to search over a from-scratch
+rebuild of the mutated table, for every index kind and in multi-tenant
+mode."""
+import numpy as np
+import pytest
+
+from repro.core.types import Constraints, IndexSpec, QueryPlan, Workload
+from repro.core.tuner import Mint
+from repro.data.vectors import make_database, make_queries
+from repro.index.registry import IndexStore
+from repro.ingest import (CompactionPolicy, Compactor, DataDriftDetector,
+                          DeleteBatch, IngestConfig, IngestRuntime,
+                          InsertBatch, MutableTable, MutationView,
+                          UpsertBatch)
+from repro.online.runtime import RuntimeConfig
+from repro.online.trace import TimedMutation, TimedQuery, churn_trace, row_batch
+from repro.serve.engine import BatchEngine
+
+K = 10
+COLS = [("a", 24), ("b", 32)]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(500, COLS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl(db):
+    qs = make_queries(db, [(0,), (0, 1), (1,)], k=K, seed=7)
+    return Workload(queries=qs, probs=np.ones(len(qs)))
+
+
+def _churned_table(db, seed=1, n_insert=40, n_delete=60, n_upsert=0):
+    t = MutableTable(db)
+    rng = np.random.default_rng(seed)
+    t.apply(InsertBatch(row_batch(db, rng, n_insert)))
+    t.apply(DeleteBatch(rng.choice(t.live_ids(), size=n_delete,
+                                   replace=False)))
+    if n_upsert:
+        ids = rng.choice(t.live_ids(), size=n_upsert, replace=False)
+        t.apply(UpsertBatch(ids, row_batch(db, rng, n_upsert)))
+    return t
+
+
+# ---- mutation log + table bookkeeping -------------------------------------
+
+
+def test_insert_delete_upsert_bookkeeping(db):
+    t = MutableTable(db)
+    rng = np.random.default_rng(0)
+    lsn, ids = t.apply(InsertBatch(row_batch(db, rng, 10)))
+    assert lsn == 0 and list(ids) == list(range(500, 510))
+    assert t.n_live == 510 and t.n_delta == 10
+    assert t.delta_fraction == pytest.approx(10 / 510)
+
+    _, _ = t.apply(DeleteBatch(np.array([0, 1, 505])))
+    assert t.n_live == 507 and t.n_dead == 3
+    assert not t.contains(0) and not t.contains(505) and t.contains(2)
+
+    # stale delete: unknown + already-dead ids are counted no-ops
+    t.apply(DeleteBatch(np.array([0, 99999])))
+    assert t.log.stale_deletes == 2 and t.n_live == 507
+
+    # upsert keeps the stable id, replaces content, tombstones the old row
+    new = row_batch(db, rng, 2)
+    t.apply(UpsertBatch(np.array([3, 502]), new))
+    assert t.n_live == 507 and t.contains(3) and t.contains(502)
+    mdb, mids = t.materialize()
+    pos = int(np.searchsorted(mids, 3))
+    np.testing.assert_allclose(mdb.columns[0][pos], new[0][0], rtol=1e-6)
+
+    with pytest.raises(ValueError):
+        t.apply(InsertBatch([np.zeros((2, 24), np.float32)]))  # 1 of 2 cols
+    with pytest.raises(ValueError):  # duplicate ids would leave a phantom
+        t.apply(UpsertBatch(np.array([7, 7]), row_batch(db, rng, 2)))
+    with pytest.raises(TypeError):
+        t.apply(object())
+
+
+def test_materialize_orders_by_stable_id_and_rebase(db):
+    t = _churned_table(db, seed=2, n_upsert=5)
+    mdb, mids = t.materialize()
+    assert mdb.n_rows == t.n_live
+    assert np.all(np.diff(mids) > 0)  # ascending stable ids (canonical)
+    lsn_cut = t.log.next_lsn
+    t.rebase(mdb, mids, lsn_cut)
+    assert t.n_delta == 0 and t.n_dead == 0 and t.n_live == mdb.n_rows
+    assert len(t.log) == 0 and t.log.truncated_upto == lsn_cut
+    assert not t.base_identity  # ids survived the rebase with gaps
+    # stable ids survive: contains() keyed on ids, not physical rows
+    assert t.contains(int(mids[0])) and t.contains(int(mids[-1]))
+    # fresh inserts continue above every id ever assigned
+    _, new_ids = t.apply(InsertBatch(row_batch(mdb, np.random.default_rng(3), 2)))
+    assert new_ids.min() > int(mids.max())
+
+
+def test_incremental_live_means_match_rescan(db):
+    t = _churned_table(db, seed=3, n_upsert=8)
+    mdb, _ = t.materialize()
+    for c in range(mdb.n_cols):
+        np.testing.assert_allclose(t.live_mean(c),
+                                   mdb.columns[c].mean(axis=0),
+                                   rtol=1e-5, atol=1e-7)
+
+
+# ---- acceptance: bit-identical to a from-scratch rebuild ------------------
+
+
+def _assert_identical_to_rebuild(db, table, pairs, store=None):
+    """Run plans over (base + delta + tombstones) and over a materialized
+    rebuild; ids must match exactly (rebuild phys ids map through the
+    stable-id vector)."""
+    eng = BatchEngine(db, store=store)
+    eng.attach_mutations(MutationView(table))
+    mdb, mids = table.materialize()
+    rstore = None if store is None else IndexStore(mdb, seed=store.seed)
+    reng = BatchEngine(mdb, store=rstore)
+    got = eng.search_batch(pairs)
+    ref = reng.search_batch(pairs)
+    for (q, _), g, r in zip(pairs, got, ref):
+        np.testing.assert_array_equal(
+            np.asarray(g), mids[np.asarray(r)],
+            err_msg=f"vid={q.vid} mutated-path != rebuild")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_flat_paths_bit_identical_to_rebuild(db, seed):
+    """Randomized churn; exercises single-exact scans, the multi-index
+    rerank, and the no-spec fallback group — all flat (exact) paths, where
+    rebuild equality must hold at ANY ek."""
+    rng = np.random.default_rng(seed)
+    t = _churned_table(db, seed=seed, n_insert=int(rng.integers(5, 60)),
+                       n_delete=int(rng.integers(5, 80)),
+                       n_upsert=int(rng.integers(0, 10)))
+    qs = make_queries(db, [(0,), (0, 1), (1,), (0, 1)], k=K, seed=seed)
+    plans = {
+        "single": lambda q: QueryPlan(q.qid, [IndexSpec(q.vid, "flat")],
+                                      [int(rng.integers(8, 50))], 1.0, 1.0),
+        "rerank": lambda q: QueryPlan(
+            q.qid, [IndexSpec((c,), "flat") for c in q.vid],
+            [int(rng.integers(8, 50)) for _ in q.vid], 1.0, 1.0),
+        "fallback": lambda q: QueryPlan(q.qid, [], [], 1.0, 1.0),
+    }
+    for make_plan in plans.values():
+        pairs = [(q, make_plan(q)) for q in qs]
+        _assert_identical_to_rebuild(db, t, pairs)
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf", "hnsw", "diskann"])
+def test_every_index_kind_bit_identical_to_rebuild(db, kind):
+    """The acceptance property per index kind. ANN candidate generation is
+    only deterministic across two different physical layouts when it is
+    exhaustive, so non-flat kinds run at ek = n_live (IVF probes every
+    list, graph walks visit every reachable node); flat is exact at any
+    depth. Equality covers the rerank path (two single-column indexes) and
+    the single-exact path."""
+    t = _churned_table(db, seed=11, n_insert=30, n_delete=45, n_upsert=5)
+    store = IndexStore(db, seed=0)
+    qs = make_queries(db, [(0, 1), (0, 1)], k=K, seed=13)
+    ek = 40 if kind == "flat" else t.n_live
+    pairs = [(qs[0], QueryPlan(qs[0].qid,
+                               [IndexSpec((0,), kind), IndexSpec((1,), kind)],
+                               [ek, ek], 1.0, 1.0)),
+             (qs[1], QueryPlan(qs[1].qid, [IndexSpec((0, 1), kind)],
+                               [ek], 1.0, 1.0))]
+    _assert_identical_to_rebuild(db, t, pairs, store=store)
+
+
+def test_bit_identical_after_compaction_rebase(db):
+    """Compaction rebases the table onto a non-identity stable-id mapping;
+    fresh mutations on top must still serve exactly like a rebuild."""
+    t = _churned_table(db, seed=17)
+    mdb, mids = t.materialize()
+    t.rebase(mdb, mids)
+    rng = np.random.default_rng(18)
+    t.apply(InsertBatch(row_batch(mdb, rng, 20)))
+    t.apply(DeleteBatch(rng.choice(t.live_ids(), size=25, replace=False)))
+    qs = make_queries(db, [(0, 1), (0,)], k=K, seed=19)
+    pairs = [(q, QueryPlan(q.qid, [IndexSpec(q.vid, "flat")], [30], 1.0, 1.0))
+             for q in qs]
+    _assert_identical_to_rebuild(mdb, t, pairs)
+
+
+def test_multi_tenant_bit_identical_to_rebuild():
+    """Acceptance in multi-tenant mode: each tenant's mutated stream serves
+    bit-identically to a rebuild of ITS table, deltas and all, while the
+    other tenant's results are untouched by the neighbor's churn."""
+    from repro.tenancy import MultiTenantRuntime, Tenant
+
+    cons = Constraints(theta_recall=0.85, theta_storage=2)
+    specs, dbs, wls = [], {}, {}
+    for i, tid in enumerate(("A", "B")):
+        tdb = make_database(300, COLS, seed=i)
+        twl = Workload(queries=make_queries(tdb, [(0,), (0, 1)], k=8, seed=i),
+                       probs=np.ones(2))
+        dbs[tid], wls[tid] = tdb, twl
+        specs.append(Tenant(tid, tdb,
+                            Mint(tdb, index_kind="ivf", seed=i,
+                                 min_sample_rows=200), twl, cons))
+    rt = MultiTenantRuntime(specs, budget_bytes=256 << 20,
+                            config=RuntimeConfig(max_batch=4))
+    rt.enable_ingest("A")
+    rng = np.random.default_rng(5)
+    rt.mutate("A", InsertBatch(row_batch(dbs["A"], rng, 25)))
+    st = rt.state("A")
+    rt.mutate("A", DeleteBatch(rng.choice(st.table.live_ids(), size=40,
+                                          replace=False)))
+
+    qA = make_queries(dbs["A"], [(0, 1)], k=8, seed=21)[0]
+    qB = make_queries(dbs["B"], [(0, 1)], k=8, seed=22)[0]
+    qB.qid = qA.qid + 1
+    tkA = rt.submit("A", qA, 0.0)
+    tkB = rt.submit("B", qB, 0.0)
+    rt.drain(0.1)
+
+    # tenant A: equal to a from-scratch rebuild of its mutated table
+    mdb, mids = st.table.materialize()
+    reng = BatchEngine(mdb, store=IndexStore(mdb, seed=0))
+    [refA] = reng.search_batch([(qA, tkA.plan)])
+    np.testing.assert_array_equal(np.asarray(tkA.ids), mids[np.asarray(refA)])
+    # tenant B: identical to an isolated, unmutated deployment
+    iso = BatchEngine(dbs["B"], store=IndexStore(dbs["B"], seed=1))
+    [refB] = iso.search_batch([(qB, tkB.plan)])
+    np.testing.assert_array_equal(np.asarray(tkB.ids), np.asarray(refB))
+    # governed delta bytes are charged to A only
+    assert any(v and v[0] == "delta" and tid == "A"
+               for tid, v, _ in rt.governor.resident())
+    assert not any(v and v[0] == "delta" and tid == "B"
+                   for tid, v, _ in rt.governor.resident())
+
+
+# ---- tombstone visibility -------------------------------------------------
+
+
+def test_deleted_rows_never_surface(db):
+    t = MutableTable(db)
+    q = make_queries(db, [(0, 1)], k=K, seed=23)[0]
+    eng = BatchEngine(db, store=None)
+    view = MutationView(t)
+    eng.attach_mutations(view)
+    plan = QueryPlan(q.qid, [IndexSpec((0, 1), "flat")], [K], 1.0, 1.0)
+    [ids0] = eng.search_batch([(q, plan)])
+    # kill the entire current top-k, twice over
+    t.apply(DeleteBatch(np.asarray(ids0)))
+    [ids1] = eng.search_batch([(q, plan)])
+    assert not set(map(int, ids1)) & set(map(int, ids0))
+    np.testing.assert_array_equal(np.asarray(ids1), view.ground_truth(q))
+
+
+def test_topk_clamps_to_live_rows():
+    small = make_database(40, COLS, seed=4)
+    t = MutableTable(small)
+    t.apply(DeleteBatch(np.arange(35)))  # 5 alive < k
+    q = make_queries(small, [(0, 1)], k=K, seed=25)[0]
+    eng = BatchEngine(small, store=None)
+    eng.attach_mutations(MutationView(t))
+    for plan in (QueryPlan(q.qid, [IndexSpec((0, 1), "flat")], [K], 1.0, 1.0),
+                 QueryPlan(q.qid, [], [], 1.0, 1.0)):
+        [ids] = eng.search_batch([(q, plan)])
+        assert ids.shape[0] == 5  # never NEG_INF-padded ghosts
+        assert set(map(int, ids)) == set(range(35, 40))
+
+
+# ---- delta segments + governor --------------------------------------------
+
+
+def test_delta_segments_versioning_and_release(db):
+    from repro.tenancy import MemoryGovernor
+
+    t = MutableTable(db)
+    gov = MemoryGovernor(budget_bytes=1 << 30)
+
+    class _Probe:
+        def evict_device(self, vid):
+            return False
+    gov.register("T", _Probe())
+    view = MutationView(t, governor=gov, tenant="T")
+    gov.register_delta("T", view.segments)
+    assert view.delta((0,)) is None  # no delta yet
+    rng = np.random.default_rng(6)
+    t.apply(InsertBatch(row_batch(db, rng, 10)))
+    d1 = view.delta((0,))
+    assert d1.n_rows == 10 and gov.tenant_bytes("T") > 0
+    bytes_1 = gov.tenant_bytes("T")
+    t.apply(InsertBatch(row_batch(db, rng, 200)))  # new version: re-upload
+    d2 = view.delta((0,))
+    assert d2.n_rows == 210 and gov.tenant_bytes("T") > bytes_1
+    view.segments.drop_all()
+    assert gov.tenant_bytes("T") == 0  # every charge released
+
+
+# ---- compactor ------------------------------------------------------------
+
+
+def test_compaction_policy_triggers(db):
+    t = MutableTable(db)
+    pol = CompactionPolicy(max_delta_fraction=0.05, max_dead_fraction=0.08,
+                           max_log_records=100)
+    assert pol.should_compact(t) is None
+    rng = np.random.default_rng(7)
+    t.apply(InsertBatch(row_batch(db, rng, 30)))
+    assert pol.should_compact(t).startswith("delta_fraction")
+    t2 = MutableTable(db)
+    t2.apply(DeleteBatch(np.arange(45)))
+    assert pol.should_compact(t2).startswith("dead_fraction")
+    t3 = MutableTable(db)
+    assert CompactionPolicy(max_delta_fraction=None, max_dead_fraction=None,
+                            max_log_records=2).should_compact(t3) is None
+    t3.apply(DeleteBatch(np.array([0])))
+    t3.apply(DeleteBatch(np.array([1])))
+    assert CompactionPolicy(max_delta_fraction=None, max_dead_fraction=None,
+                            max_log_records=2).should_compact(t3) \
+        .startswith("log_records")
+
+
+def test_compactor_build_folds_and_shadow_builds(db):
+    t = _churned_table(db, seed=27)
+    comp = Compactor(t, seed=0)
+    config = frozenset({IndexSpec((0,), "ivf"), IndexSpec((0, 1), "ivf")})
+    state = comp.build(config, reason="test")
+    assert state.db.n_rows == t.n_live
+    assert state.stats.delta_folded == t.n_delta
+    assert state.stats.dead_reclaimed == t.n_dead
+    assert set(state.store.built_specs()) == set(config)
+    # pure construction: the live table was NOT touched
+    assert t.n_delta > 0 and t.n_dead > 0
+
+
+# ---- data drift -----------------------------------------------------------
+
+
+def test_data_drift_detector_churn_and_shift(db):
+    t = MutableTable(db)
+    det = DataDriftDetector(t, delta_threshold=0.1, churn_threshold=0.2,
+                            shift_threshold=0.5, min_mutated_rows=10)
+    assert not det.check().drifted
+    rng = np.random.default_rng(8)
+    t.apply(InsertBatch(row_batch(db, rng, 80)))
+    rep = det.check()
+    assert rep.drifted and rep.reason.startswith("delta_fraction")
+    # compaction folds the delta but cumulative churn still counts
+    mdb, mids = t.materialize()
+    t.rebase(mdb, mids)
+    rep2 = det.check()
+    assert rep2.delta_fraction == 0.0
+    assert rep2.churn_fraction > 0.1 and rep2.mutated_rows == 80
+    det.rearm()
+    assert not det.check().drifted  # re-baselined
+
+    # gate: below min_mutated_rows nothing fires no matter the fractions
+    t2 = MutableTable(make_database(60, COLS, seed=9))
+    det2 = DataDriftDetector(t2, delta_threshold=0.01, min_mutated_rows=50)
+    t2.apply(InsertBatch(row_batch(t2.base, rng, 5)))
+    assert not det2.check().drifted
+
+
+def test_centroid_shift_fires_on_distribution_change(db):
+    drift_db = make_database(500, COLS, seed=77)
+    t = MutableTable(db)
+    det = DataDriftDetector(t, delta_threshold=1.1, churn_threshold=1.1,
+                            shift_threshold=0.02, min_mutated_rows=32)
+    rng = np.random.default_rng(10)
+    t.apply(InsertBatch(row_batch(db, rng, 150, source=drift_db)))
+    rep = det.check()
+    assert rep.max_shift > 0.0
+    assert rep.drifted and rep.reason.startswith("centroid_shift")
+
+
+# ---- ingest runtime -------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mint(db):
+    return Mint(db, index_kind="ivf", seed=0, min_sample_rows=300)
+
+
+@pytest.fixture(scope="module")
+def cons():
+    return Constraints(theta_recall=0.85, theta_storage=3)
+
+
+def _ingest_runtime(db, mint, wl, cons, **ingest_kw):
+    kw = dict(policy=CompactionPolicy(max_delta_fraction=0.1,
+                                      max_dead_fraction=0.12),
+              min_mutated_rows=10_000, data_cooldown_s=0.0)
+    kw.update(ingest_kw)
+    return IngestRuntime(
+        db, mint, wl, cons,
+        config=RuntimeConfig(max_batch=4, max_delay_ms=5.0, window=32,
+                             min_window=16, drift_threshold=2.0,
+                             cooldown_s=1e9, measure=True),
+        ingest=IngestConfig(**kw))
+
+
+def test_churn_trace_structure(db, wl):
+    trace = churn_trace(db, wl, n=40, qps=500.0, mutation_rate=0.5, batch=4,
+                        mix=(0.5, 0.3, 0.2), seed=12)
+    muts = [e for e in trace if isinstance(e, TimedMutation)]
+    qs = [e for e in trace if isinstance(e, TimedQuery)]
+    assert len(qs) == 40 and len(muts) == 20
+    ts = [e.t for e in trace]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert {m.kind for m in muts} <= {"insert", "delete", "upsert"}
+    for m in muts:
+        if m.kind in ("insert", "upsert"):
+            assert m.vectors is not None and len(m.vectors) == db.n_cols
+    from repro.online.trace import make_trace
+    assert len(make_trace(db, "churn", workload=wl, n=8, qps=100.0,
+                          seed=1)) >= 8
+    with pytest.raises(ValueError):
+        churn_trace(db, wl, n=4, mix=(0, 0, 0))
+
+
+def test_ingest_runtime_visibility_and_compaction(db, mint, wl, cons):
+    rt = _ingest_runtime(db, mint, wl, cons)
+    trace = churn_trace(db, wl, n=50, qps=1000.0, mutation_rate=0.4,
+                        batch=8, mix=(0.6, 0.4, 0.0), seed=14)
+    gen0 = rt.generation
+    tickets = rt.run_mixed_trace(trace)
+    assert all(t.done for t in tickets)
+    assert len(rt.compaction_events) >= 1  # policy fired under this churn
+    assert rt.generation > gen0           # EVERY compaction bumps the gen
+    assert rt.generation >= len(rt.compaction_events)
+    # recall measured against the LIVE table's ground truth stays high
+    # (delta rows are scanned exactly; tombstones never surface)
+    recalls = [t.metrics.recall for t in tickets[-12:]]
+    assert np.mean(recalls) >= cons.theta_recall
+    # post-trace: a fresh query is served over the rebased table and is
+    # bit-identical to a from-scratch rebuild
+    q = make_queries(db, [(0, 1)], k=K, seed=31)[0]
+    q.qid = 999_001
+    tk = rt.submit(q, 100.0)
+    rt.drain(100.1)
+    mdb, mids = rt.table.materialize()
+    reng = BatchEngine(mdb, store=IndexStore(mdb, seed=0))
+    [ref] = reng.search_batch([(q, tk.plan)])
+    np.testing.assert_array_equal(np.asarray(tk.ids), mids[np.asarray(ref)])
+
+
+def test_mutation_flush_ordering(db, mint, wl, cons):
+    """A mutation is ordered strictly between micro-batch flushes: tickets
+    queued before the mutation but flushed after it see the post-mutation
+    table — one consistent version per flush, never a mix."""
+    rt = _ingest_runtime(db, mint, wl, cons,
+                         policy=CompactionPolicy(max_delta_fraction=None,
+                                                 max_dead_fraction=None))
+    rt.batcher.max_batch = 64  # queue everything; drain flushes once
+    q1, q2 = make_queries(db, [(0, 1), (0, 1)], k=K, seed=33)
+    q1.qid, q2.qid = 999_100, 999_101
+    t1 = rt.submit(q1, 0.0)
+    [gt_before] = [rt.view.ground_truth(q1)]
+    rt.mutate(DeleteBatch(gt_before[:5]))   # kill half the queued top-k
+    t2 = rt.submit(q2, 0.001)
+    done = rt.drain(0.01)
+    assert {id(x) for x in done} == {id(t1), id(t2)}
+    assert t1.batch_size == 2  # one flush, one table version
+    for tk in (t1, t2):
+        assert not set(map(int, tk.ids)) & set(map(int, gt_before[:5]))
+        np.testing.assert_array_equal(np.asarray(tk.ids),
+                                      rt.view.ground_truth(tk.query))
+
+
+def test_data_drift_retune_lifecycle(db, mint, cons, wl):
+    drift_db = make_database(500, COLS, seed=88)
+    rt = _ingest_runtime(db, mint, wl, cons,
+                         min_mutated_rows=120, churn_threshold=0.25,
+                         shift_threshold=0.03,
+                         policy=CompactionPolicy(max_delta_fraction=0.5,
+                                                 max_dead_fraction=0.5))
+    trace = churn_trace(db, wl, n=60, qps=1000.0, mutation_rate=0.6,
+                        batch=8, mix=(0.75, 0.25, 0.0),
+                        insert_source=drift_db, seed=15)
+    tickets = rt.run_mixed_trace(trace)
+    assert len(rt.data_retune_events) >= 1
+    ev = rt.data_retune_events[0]
+    assert ev.generation >= 1 and ev.tune_seconds > 0
+    # the tuner was rebased onto the live (compacted) snapshot
+    assert rt.mint.db is rt.db and rt.db.n_rows == rt.table.n_base
+    assert rt.store.db is rt.db
+    # serving stayed correct through the swap
+    recalls = [t.metrics.recall for t in tickets[-10:]]
+    assert np.mean(recalls) >= cons.theta_recall
+    # detector re-armed: no immediate refire
+    assert not rt.data_detector.check().drifted

@@ -354,6 +354,84 @@ def test_swap_store_inflight_drop_prune_isolation(db, day, tuned):
     np.testing.assert_array_equal(np.asarray(ids_old), np.asarray(ids_new))
 
 
+def test_midflight_tickets_see_one_store_generation_pair(db, mint, day,
+                                                         night, cons, tuned):
+    """Satellite acceptance: tickets queued BEFORE a swap must execute
+    against exactly one consistent (store, generation) pair — the
+    pre-swap one (the swap drains them under their admitted plans before
+    bumping the generation or pruning), and tickets submitted after the
+    swap execute entirely under the new pair. No flush may ever straddle
+    a swap."""
+    rt = _runtime(db, mint, day, cons, tuned, drift_threshold=2.0)
+    rt.batcher.max_batch = 64  # queue everything: only drains flush
+    observed: list[tuple[int, int, int]] = []  # (store id, gen, batch size)
+    real_execute = rt._execute
+
+    def instrumented(tickets):
+        observed.append((id(rt.store), rt.generation, len(tickets)))
+        return real_execute(tickets)
+
+    rt.batcher.execute = instrumented
+    pre_queries = make_queries(db, DAY_VIDS, k=K, seed=41)
+    for i, q in enumerate(pre_queries):
+        q.qid = 300_000 + i
+    pre = [rt.submit(q, now=float(i) * 1e-4)
+           for i, q in enumerate(pre_queries)]
+    assert all(not t.done for t in pre)
+    store_before, gen_before = id(rt.store), rt.generation
+
+    night_result = mint.retune(night, cons, warm_start=tuned)
+    for spec in night_result.configuration:  # shadow build, as the retuner
+        if spec not in rt.store:
+            rt.store.get(spec)
+    rt.swap(night_result, night, now=1.0)
+
+    assert all(t.done for t in pre)  # the swap drained them first
+    post_queries = make_queries(db, NIGHT_VIDS, k=K, seed=42)
+    for i, q in enumerate(post_queries):
+        q.qid = 310_000 + i
+    post = [rt.submit(q, now=2.0 + float(i) * 1e-4)
+            for i, q in enumerate(post_queries)]
+    rt.drain(now=3.0)
+
+    pre_flushes = [o for o in observed[: len(observed)]
+                   if o[1] == gen_before]
+    post_flushes = [o for o in observed if o[1] != gen_before]
+    assert pre_flushes and post_flushes
+    # every flush saw exactly one pair; pre-swap flushes saw the OLD pair
+    assert {o[:2] for o in pre_flushes} == {(store_before, gen_before)}
+    assert {o[1] for o in post_flushes} == {gen_before + 1}
+    assert sum(o[2] for o in pre_flushes) == len(pre)
+    # pruning the store after the swap kept exactly the new configuration —
+    # pre-swap plans' stale indexes are gone, yet the drained tickets
+    # completed under them before the prune (ids already delivered)
+    assert set(rt.store.built_specs()) <= set(night_result.configuration)
+    for t in pre + post:
+        assert t.ids is not None
+
+
+def test_swap_store_midflight_with_prune(db, day, tuned):
+    """BatchEngine.swap_store + IndexStore.prune mid-flight: a batch
+    executed between submit-time planning and a store swap runs entirely
+    against whichever store the engine held at flush time; pruning the
+    retired store afterwards must not disturb results from either side."""
+    from repro.serve.engine import BatchEngine
+    q = day.queries[0]
+    plan = tuned.plans[q.qid]
+    assert plan.indexes
+    old_store, new_store = IndexStore(db, seed=0), IndexStore(db, seed=0)
+    engine = BatchEngine(db, store=old_store)
+    [ids_old] = engine.search_batch([(q, plan)])
+    for spec in plan.indexes:  # shadow build
+        new_store.get(spec)
+    engine.swap_store(new_store)
+    dropped = old_store.prune([])  # retire the old store mid-session
+    assert set(dropped) == set(plan.indexes)
+    [ids_new] = engine.search_batch([(q, plan)])
+    np.testing.assert_array_equal(np.asarray(ids_old), np.asarray(ids_new))
+    assert set(new_store.built_specs()) == set(plan.indexes)  # no rebuilds
+
+
 # ---- trace generators -----------------------------------------------------
 
 
