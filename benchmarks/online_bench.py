@@ -20,6 +20,7 @@ and a burst-scenario micro-batching summary. Emits BENCH_online.json.
 """
 import argparse
 import json
+import time
 
 import numpy as np
 
@@ -91,6 +92,60 @@ def burst_summary(db, mint, day, cons, result, store) -> dict:
             "plan_cache_hit_rate": st["plan_cache"]["hit_rate"]}
 
 
+def async_flush_overlap(db, mint, day, cons, result) -> dict:
+    """Flush-pipeline overlap (DESIGN.md §10): the same burst served with
+    in-line flushes vs the worker pool (batch N+1's host→device staging
+    overlaps batch N's kernel dispatch). Virtual-time trace, wall-clock
+    processing: the wall ratio is the pipeline gain; ids are checked
+    bit-identical between the two modes."""
+    from repro.online import burst_trace
+
+    trace = burst_trace(db, day, burst_vid=(0, 1), n=240, qps=4000.0,
+                        seed=23, qid_start=80_000)
+    out = {}
+    ids = {}
+    # a throwaway FULL run first: whichever runtime goes first otherwise
+    # pays ~5s of process-wide warm-up (index-build jit, kernel compiles)
+    # that the per-runtime warm below does not cover, which once inflated
+    # the "overlap speedup" of whatever mode happened to run second
+    warm = OnlineRuntime(db, mint, day, cons, result=result,
+                         store=IndexStore(db, seed=0),
+                         config=RuntimeConfig(max_batch=16, cooldown_s=1e9,
+                                              drift_threshold=2.0))
+    warm.run_trace(trace)
+    for mode in ("sync", "async"):
+        cfg = RuntimeConfig(max_batch=16, max_delay_ms=5.0, window=96,
+                            min_window=48, cooldown_s=1e9,
+                            drift_threshold=2.0,
+                            async_flush=(mode == "async"), workers=2)
+        rt = OnlineRuntime(db, mint, day, cons, result=result,
+                           store=IndexStore(db, seed=0), config=cfg)
+        rt.run_trace(trace[:32])  # warm kernels + plan cache
+        t0 = time.time()
+        tickets = rt.run_trace(trace)
+        wall = time.time() - t0
+        ids[mode] = [np.asarray(t.result(timeout=60)) for t in tickets]
+        st = rt.batcher.stats
+        out[mode] = {
+            "wall_s": float(wall),
+            "queries_per_s": float(len(tickets) / max(wall, 1e-9)),
+            "batches": st.batches,
+            "mean_batch": st.mean_batch,
+        }
+        rt.close()
+    bit_identical = all(
+        np.array_equal(a, b) for a, b in zip(ids["sync"], ids["async"]))
+    out["overlap_speedup"] = (out["sync"]["wall_s"]
+                              / max(out["async"]["wall_s"], 1e-9))
+    out["bit_identical"] = bool(bit_identical)
+    out["note"] = ("CPU-interpret container: XLA already multithreads each "
+                   "dispatch, so the 2-worker pipeline lands within noise "
+                   "of sync (~0.9-1.1x across runs); the overlap pays on "
+                   "real devices where host->device transfer is the gap. "
+                   "bit_identical is the invariant under test here.")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=10000)
@@ -140,6 +195,7 @@ def main() -> None:
         "variants": variants,
         "burst": burst_summary(db, mint, day, cons, result,
                                IndexStore(db, seed=0)),
+        "async_flush": async_flush_overlap(db, mint, day, cons, result),
         "drift_tail_cost_ratio_stale_over_retuned":
             stale_cost / max(retuned_cost, 1e-9),
         "acceptance": {

@@ -15,8 +15,8 @@ layer over the immutable indexes —
   - ``runtime``   : IngestRuntime — OnlineRuntime + the mutation path and
                     the data-side maintenance loop.
 """
-from repro.ingest.compactor import (CompactionPolicy, CompactionStats,
-                                    Compactor)
+from repro.ingest.compactor import (CompactionCut, CompactionPolicy,
+                                    CompactionStats, Compactor)
 from repro.ingest.delta import DeltaSegments, MutationView
 from repro.ingest.drift import DataDriftDetector, DataDriftReport
 from repro.ingest.mutation import (DeleteBatch, InsertBatch, MutationLog,
@@ -26,7 +26,8 @@ from repro.ingest.runtime import (CompactionEvent, DataRetuneEvent,
 from repro.ingest.table import MutableTable
 
 __all__ = [
-    "CompactionEvent", "CompactionPolicy", "CompactionStats", "Compactor",
+    "CompactionCut", "CompactionEvent", "CompactionPolicy",
+    "CompactionStats", "Compactor",
     "DataDriftDetector", "DataDriftReport", "DataRetuneEvent", "DeleteBatch",
     "DeltaSegments", "IngestConfig", "IngestRuntime", "InsertBatch",
     "MutableTable", "MutationLog", "MutationView", "UpsertBatch",

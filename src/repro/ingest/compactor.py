@@ -70,6 +70,20 @@ class CompactionStats:
 
 
 @dataclass
+class CompactionCut:
+    """A consistent snapshot of the live table at one log LSN — the input
+    to an (async) shadow build. Cheap to take (one materialize under the
+    table lock); the slow index build runs off it, off the serving path."""
+
+    db: MultiVectorDatabase
+    ids: np.ndarray            # stable id per snapshot physical row
+    upto_lsn: int              # records below are IN the snapshot
+    rows_before: int           # physical rows at the cut
+    delta_folded: int
+    dead_reclaimed: int
+
+
+@dataclass
 class CompactedState:
     """Shadow-built serving state, ready for an atomic swap."""
 
@@ -95,22 +109,34 @@ class Compactor:
     def should_compact(self) -> str | None:
         return self.policy.should_compact(self.table)
 
-    def build(self, configuration, reason: str = "manual",
-              make_cstore=None) -> CompactedState:
-        """Materialize + shadow-build (no serving state touched). The
-        runtime applies the result under its swap lock and then calls
-        ``table.rebase(state.db, state.ids, state.stats.upto_lsn)``.
+    def cut(self) -> CompactionCut:
+        """Snapshot the live table at its current log LSN (cheap, one
+        materialize). Mutations may keep landing after the cut — they stay
+        in the log and are REPLAYED onto the built base at rebase time
+        (``MutableTable.rebase(..., replay=...)``), which is what lets the
+        slow build below run off the serving path (DESIGN.md §10)."""
+        table = self.table
+        delta_folded, dead = table.n_delta, table.n_dead
+        rows_before = table.n_base + table.n_delta
+        db, ids, upto_lsn = table.snapshot()
+        return CompactionCut(db=db, ids=ids, upto_lsn=upto_lsn,
+                             rows_before=rows_before,
+                             delta_folded=delta_folded, dead_reclaimed=dead)
+
+    def build_from(self, cut: CompactionCut, configuration,
+                   reason: str = "manual", make_cstore=None) -> CompactedState:
+        """Shadow-build serving state over a cut snapshot (no serving state
+        touched — pure construction, safe on a worker thread). The runtime
+        applies the result under its swap lock and then calls
+        ``table.rebase(state.db, state.ids, state.stats.upto_lsn,
+        replay=log.since(upto_lsn))``.
 
         ``make_cstore`` customizes column-store construction (the tenancy
         layer passes a governed builder); ``None`` builds a plain
         ``ColumnStore``; ``False`` skips it (caller builds its own).
         """
         t0 = time.time()
-        table = self.table
-        upto_lsn = table.log.next_lsn
-        rows_before = table.n_base + table.n_delta
-        delta_folded, dead = table.n_delta, table.n_dead
-        db, ids = table.materialize()
+        db, ids = cut.db, cut.ids
         store = IndexStore(db, seed=self.seed, **self.builder_kwargs)
         built = 0
         for spec in sorted(configuration, key=lambda s: s.name):
@@ -123,13 +149,20 @@ class Compactor:
         else:
             cstore = ColumnStore(db)
         stats = CompactionStats(
-            reason=reason, upto_lsn=upto_lsn, rows_before=rows_before,
-            rows_after=db.n_rows, delta_folded=delta_folded,
-            dead_reclaimed=dead, specs_rebuilt=built,
+            reason=reason, upto_lsn=cut.upto_lsn,
+            rows_before=cut.rows_before, rows_after=db.n_rows,
+            delta_folded=cut.delta_folded,
+            dead_reclaimed=cut.dead_reclaimed, specs_rebuilt=built,
             build_seconds=time.time() - t0)
         self.history.append(stats)
         return CompactedState(db=db, ids=ids, store=store, cstore=cstore,
                               stats=stats)
+
+    def build(self, configuration, reason: str = "manual",
+              make_cstore=None) -> CompactedState:
+        """Synchronous cut + build (the in-line compaction path)."""
+        return self.build_from(self.cut(), configuration, reason=reason,
+                               make_cstore=make_cstore)
 
     def stats(self) -> dict:
         return {"compactions": len(self.history),

@@ -94,11 +94,30 @@ def resolve_timed(table, tm) -> "Mutation | None":
 
 @dataclass
 class LogRecord:
+    """One applied mutation batch, complete enough to REPLAY (DESIGN.md
+    §10): async compaction builds a new base from a cut snapshot while
+    mutations keep landing, then re-applies every post-cut record onto the
+    new base before the atomic rebase. Replay is redo-only, so records
+    carry the row CONTENT their batch introduced or removed:
+
+      - insert/upsert: ``vectors`` = the new per-column blocks (aligned
+        with ``ids``), re-appended under the SAME stable ids on replay;
+      - delete: ``applied_ids`` = the ids actually tombstoned (stale
+        deletes excluded) and ``vectors`` = those rows' prior contents —
+        not needed for redo (a delete replays by id) but they make the log
+        a complete undo/audit record and let tests reconstruct any table
+        state between two cuts.
+
+    Vectors are retained only until the next compaction truncates the log,
+    so the memory bound is one compaction interval of churn."""
+
     lsn: int
     kind: str          # "insert" | "delete" | "upsert"
     n: int             # rows in the batch
     applied: int       # rows actually applied (deletes: non-stale)
     ids: np.ndarray    # stable ids touched
+    vectors: list | None = None        # per-column blocks (see above)
+    applied_ids: np.ndarray | None = None  # delete: non-stale subset of ids
 
 
 @dataclass
@@ -113,12 +132,15 @@ class MutationLog:
     upserted: int = 0
     stale_deletes: int = 0
 
-    def append(self, kind: str, n: int, applied: int,
-               ids: np.ndarray) -> int:
+    def append(self, kind: str, n: int, applied: int, ids: np.ndarray,
+               vectors: list | None = None,
+               applied_ids: np.ndarray | None = None) -> int:
         lsn = self.next_lsn
         self.next_lsn += 1
         self.records.append(LogRecord(lsn=lsn, kind=kind, n=n,
-                                      applied=applied, ids=ids))
+                                      applied=applied, ids=ids,
+                                      vectors=vectors,
+                                      applied_ids=applied_ids))
         if kind == "insert":
             self.inserted += applied
         elif kind == "delete":

@@ -29,6 +29,7 @@ from dataclasses import dataclass, replace as dc_replace
 
 import numpy as np
 
+from repro.async_.coordinator import BuildCoordinator
 from repro.core.types import Constraints, TuningResult, Workload
 from repro.ingest.compactor import CompactionPolicy, Compactor
 from repro.ingest.delta import MutationView
@@ -52,6 +53,10 @@ class IngestConfig:
     min_mutated_rows: int = 64
     data_cooldown_s: float = 60.0            # min spacing of data retunes
     auto_maintain: bool = True               # tick() runs the data side
+    # DESIGN.md §10: policy-triggered compactions cut on-path but build on
+    # the worker pool; serving continues on the old (store, generation)
+    # pair and the post-cut log is replayed before the atomic rebase
+    async_compaction: bool = False
 
 
 @dataclass
@@ -63,7 +68,11 @@ class CompactionEvent:
     rows_after: int
     dead_reclaimed: int
     delta_folded: int
-    build_seconds: float
+    build_seconds: float       # shadow build (async: off the serving path)
+    mode: str = "sync"         # "sync" | "async"
+    replayed: int = 0          # post-cut log records replayed at rebase
+    stall_s: float = 0.0       # serving-path stall (drain + replay + swap;
+                               # sync mode: includes the whole build)
 
 
 @dataclass
@@ -86,9 +95,10 @@ class IngestRuntime(OnlineRuntime):
                  result: TuningResult | None = None, store=None, engine=None,
                  config: RuntimeConfig | None = None,
                  ingest: IngestConfig | None = None,
-                 table: MutableTable | None = None):
+                 table: MutableTable | None = None, executor=None):
         super().__init__(db, mint, workload, constraints, result=result,
-                         store=store, engine=engine, config=config)
+                         store=store, engine=engine, config=config,
+                         executor=executor)
         self.ingest = ingest or IngestConfig()
         self.table = table if table is not None else MutableTable(db)
         cs = self.engine.cstore
@@ -106,14 +116,29 @@ class IngestRuntime(OnlineRuntime):
         self.data_retune_events: list[DataRetuneEvent] = []
         self._fallback_workload = workload
         self._last_data_fire: float | None = None
+        self.builds: BuildCoordinator | None = None
+        self.stale_async_builds = 0
+        if self.ingest.async_compaction:
+            self._build_coordinator()
+
+    def _build_coordinator(self) -> BuildCoordinator:
+        if self.builds is None:
+            self.builds = BuildCoordinator(self._ensure_executor())
+        return self.builds
 
     # ---- mutation path ----------------------------------------------------
 
     def mutate(self, mutation) -> tuple[int, np.ndarray]:
         """Apply one typed mutation batch. Serialized against flushes by
         the batcher lock: a queued micro-batch executes either entirely
-        before or entirely after this mutation, never across it."""
+        before or entirely after this mutation, never across it. Under
+        async flush that rule extends to IN-FLIGHT batches: the apply
+        waits for outstanding flush jobs first (workers never take the
+        batcher lock, so this cannot deadlock) — which is also what keeps
+        async flush results bit-identical to the sync baseline under
+        churn."""
         with self.batcher.lock:
+            self.batcher.sync_inflight()
             return self.table.apply(mutation)
 
     def insert(self, vectors) -> np.ndarray:
@@ -155,22 +180,45 @@ class IngestRuntime(OnlineRuntime):
         last = events[-1].t if events else 0.0
         self.drain(last)
         self.retuner.join()
+        self.wait_maintenance(now=last)  # finalize an in-flight async build
         return tickets
 
     # ---- maintenance ------------------------------------------------------
 
     def maintain(self, now: float | None = None) -> None:
-        """One maintenance step: data-drift retune first (it compacts as
-        part of its swap — compacting separately would be wasted work),
-        else policy-triggered compaction."""
+        """One maintenance step: finalize a completed background build
+        first; while one is in flight nothing else fires (its cut must not
+        be invalidated by a competing fold). Otherwise: data-drift retune
+        (it compacts as part of its swap — compacting separately would be
+        wasted work), else policy-triggered compaction (async when
+        configured: cut now, build off-path, finalize at a later tick)."""
         now = time.time() if now is None else now
+        if self.builds is not None:
+            if self.builds.poll(now):
+                return
+            if self.builds.inflight():
+                return
         report = self.data_detector.check()
         if report.drifted and self._data_cooldown_ok(now):
             self.data_retune(report, now)
             return
         reason = self.compactor.should_compact()
         if reason is not None:
-            self.compact(reason=reason, now=now)
+            if self.ingest.async_compaction:
+                self.compact_async(reason=reason, now=now)
+            else:
+                self.compact(reason=reason, now=now)
+
+    def wait_maintenance(self, now: float | None = None,
+                         timeout: float | None = None) -> None:
+        """Block until any in-flight background build is built AND
+        finalized (tests, benches, shutdown)."""
+        if self.builds is not None:
+            self.builds.wait(timeout=timeout, now=now)
+
+    def close(self) -> None:
+        self.wait_maintenance()
+        super().close()
 
     def _data_cooldown_ok(self, now: float) -> bool:
         return (self._last_data_fire is None
@@ -179,33 +227,91 @@ class IngestRuntime(OnlineRuntime):
     def compact(self, reason: str = "manual",
                 now: float | None = None) -> CompactionEvent:
         """Fold delta + tombstones into a new base and atomically swap it
-        into serving. The batcher lock is held across build + drain +
-        install, so no mutation or flush can interleave with the fold (the
-        in-process analogue of a stop-the-world memtable rotation; an async
-        build would need log replay past the cut — see DESIGN.md §9)."""
+        into serving, IN-LINE: the batcher lock is held across build +
+        drain + install, so no mutation or flush can interleave with the
+        fold (the stop-the-world baseline ``compact_async`` is measured
+        against; nothing lands between cut and rebase, so replay is
+        empty)."""
         now = time.time() if now is None else now
+        t0 = time.time()
         with self.batcher.lock:
             state = self.compactor.build(self.result.configuration,
                                          reason=reason)
             self.batcher.drain(now)
             with self._swap_lock:
-                self._install_compaction(state)
-        ev = CompactionEvent(
+                replayed = self._install_compaction(state)
+        ev = self._compaction_event(state, reason, now, mode="sync",
+                                    replayed=replayed,
+                                    stall_s=time.time() - t0)
+        self.compaction_events.append(ev)
+        return ev
+
+    def compact_async(self, reason: str = "manual", now: float | None = None):
+        """Cut now; build off the serving path; finalize at a later tick
+        (DESIGN.md §10). Serving continues on the old (store, generation)
+        pair — post-cut mutations stay visible through the delta path and
+        are REPLAYED onto the new base before the atomic rebase, so every
+        flush observes exactly one consistent (store, generation, table)
+        triple throughout. Returns the ``BackgroundBuild`` handle, or None
+        when a build is already in flight."""
+        now = time.time() if now is None else now
+        builds = self._build_coordinator()
+        with self.batcher.lock:  # pin configuration vs a concurrent swap
+            cut = self.compactor.cut()
+            configuration = self.result.configuration
+        return builds.submit(
+            "compact",
+            lambda: self.compactor.build_from(cut, configuration,
+                                              reason=reason),
+            finalize=lambda state, t: self._finish_compaction(
+                state, reason, now if t is None else t),
+            label=f"compact:{reason}", now=now)
+
+    def _finish_compaction(self, state, reason: str,
+                           now: float) -> CompactionEvent | None:
+        """Serving-thread finalize for an async build: drain, replay the
+        post-cut log onto the new base, atomic rebase + store swap. A build
+        whose cut predates a newer fold (its replay records are gone) is
+        STALE and dropped — serving already moved past it. The stale check
+        runs under the batcher lock: a concurrent fold (e.g. a data retune
+        on another serving thread) can truncate the log while this finalize
+        waits for the lock, and rebasing onto the stale cut then would
+        silently lose the truncated mutations."""
+        t0 = time.time()
+        with self.batcher.lock:
+            if state.stats.upto_lsn < self.table.log.truncated_upto:
+                self.stale_async_builds += 1
+                return None
+            self.batcher.drain(now)
+            with self._swap_lock:
+                replayed = self._install_compaction(state)
+        ev = self._compaction_event(state, reason, now, mode="async",
+                                    replayed=replayed,
+                                    stall_s=time.time() - t0)
+        self.compaction_events.append(ev)
+        return ev
+
+    def _compaction_event(self, state, reason: str, now: float, mode: str,
+                          replayed: int, stall_s: float) -> CompactionEvent:
+        return CompactionEvent(
             t=now, reason=reason, generation=self.cache.generation,
             rows_before=state.stats.rows_before,
             rows_after=state.stats.rows_after,
             dead_reclaimed=state.stats.dead_reclaimed,
             delta_folded=state.stats.delta_folded,
-            build_seconds=state.stats.build_seconds)
-        self.compaction_events.append(ev)
-        return ev
+            build_seconds=state.stats.build_seconds,
+            mode=mode, replayed=replayed, stall_s=stall_s)
 
-    def _install_compaction(self, state) -> None:
+    def _install_compaction(self, state) -> int:
         """Caller holds batcher lock + swap lock. Order matters: the table
         rebase and the engine store swap must land together — the engine's
         MutationView reads the table, so a half-installed pair would mix
-        old physical ids with new stable mapping."""
-        self.table.rebase(state.db, state.ids, state.stats.upto_lsn)
+        old physical ids with new stable mapping. Returns the number of
+        post-cut log records replayed onto the new base (always 0 for the
+        in-line path, which excludes mutations across the fold)."""
+        replay = self.table.log.since(state.stats.upto_lsn)
+        self.table.rebase(state.db, state.ids, state.stats.upto_lsn,
+                          replay=replay)
         self.view.segments.drop_all()   # release stale device deltas
         cstore = state.cstore if state.cstore is not None \
             else ColumnStore(state.db)
@@ -216,6 +322,7 @@ class IngestRuntime(OnlineRuntime):
         # templates created against the old snapshot (its physical layout,
         # its n_rows cost terms) must not survive into the new one
         self.cache.bump_generation()
+        return len(replay)
 
     def data_retune(self, report: DataDriftReport,
                     now: float | None = None) -> DataRetuneEvent:
@@ -262,4 +369,7 @@ class IngestRuntime(OnlineRuntime):
         out["compactions"] = len(self.compaction_events)
         out["data_retunes"] = len(self.data_retune_events)
         out["data_drift"] = vars(self.data_detector.check())
+        if self.builds is not None:
+            out["async_builds"] = dict(self.builds.stats(),
+                                       stale_dropped=self.stale_async_builds)
         return out

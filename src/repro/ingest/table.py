@@ -125,21 +125,31 @@ class MutableTable:
     # ---- mutation application --------------------------------------------
 
     def apply(self, mutation) -> tuple[int, np.ndarray]:
-        """Apply one typed batch. Returns (lsn, stable ids touched)."""
+        """Apply one typed batch. Returns (lsn, stable ids touched).
+
+        Every record lands in the log WITH the vectors it moved (new rows
+        for insert/upsert, tombstoned rows' prior contents for delete), so
+        the log between two compaction cuts is a complete redo record —
+        async compaction replays it onto the new base (DESIGN.md §10)."""
         with self._lock:
             if isinstance(mutation, InsertBatch):
-                ids = self._insert(_as_blocks(mutation.vectors, self.dims()))
-                lsn = self.log.append("insert", len(ids), len(ids), ids)
+                blocks = _as_blocks(mutation.vectors, self.dims())
+                ids = self._insert(blocks)
+                lsn = self.log.append("insert", len(ids), len(ids), ids,
+                                      vectors=blocks)
             elif isinstance(mutation, DeleteBatch):
-                applied = self._delete(mutation.ids)
+                applied_ids, killed = self._delete(mutation.ids)
                 ids = mutation.ids
-                lsn = self.log.append("delete", len(ids), applied, ids)
+                lsn = self.log.append("delete", len(ids), len(applied_ids),
+                                      ids, vectors=killed,
+                                      applied_ids=applied_ids)
             elif isinstance(mutation, UpsertBatch):
                 blocks = _as_blocks(mutation.vectors, self.dims())
                 if blocks[0].shape[0] != mutation.ids.shape[0]:
                     raise ValueError("upsert ids / vectors length mismatch")
                 ids = self._upsert(mutation.ids, blocks)
-                lsn = self.log.append("upsert", len(ids), len(ids), ids)
+                lsn = self.log.append("upsert", len(ids), len(ids), ids,
+                                      vectors=blocks)
             else:
                 raise TypeError(f"unknown mutation type {type(mutation).__name__}")
             self.version += 1
@@ -165,20 +175,21 @@ class MutableTable:
         self._append_delta(blocks, ids)
         return ids
 
-    def _kill(self, stable_id: int) -> bool:
-        """Tombstone one live location; False when unknown/already dead."""
+    def _kill(self, stable_id: int) -> list | None:
+        """Tombstone one live location; returns the killed row's per-column
+        vectors (the delete log records them), None when unknown/dead."""
         loc = self._loc.get(stable_id)
         if loc is None:
-            return False
+            return None
         kind, pos = loc
         if kind == "base":
             if not self.base_alive[pos]:
-                return False
+                return None
             self.base_alive[pos] = False
             row = [c[pos] for c in self.base.columns]
         else:
             if not self._delta_alive[pos]:
-                return False
+                return None
             self._delta_alive[pos] = False
             self._n_delta_live -= 1
             mats = self._delta_matrices()
@@ -186,14 +197,23 @@ class MutableTable:
         for c, r in enumerate(row):
             self._live_sum[c] -= np.asarray(r, dtype=np.float64)
         self.n_live -= 1
-        return True
+        return row
 
-    def _delete(self, ids: np.ndarray) -> int:
-        applied = 0
+    def _delete(self, ids: np.ndarray) -> tuple[np.ndarray, list | None]:
+        """Returns (stable ids actually tombstoned, their per-column
+        blocks) — the delete record's undo/audit payload."""
+        applied: list[int] = []
+        rows: list[list] = []
         for i in ids:
-            if self._kill(int(i)):
-                applied += 1
-        return applied
+            row = self._kill(int(i))
+            if row is not None:
+                applied.append(int(i))
+                rows.append(row)
+        blocks = None
+        if rows:
+            blocks = [np.stack([r[c] for r in rows]).astype(np.float32)
+                      for c in range(len(self.base.columns))]
+        return np.asarray(applied, dtype=np.int64), blocks
 
     def _upsert(self, ids: np.ndarray, blocks: list[np.ndarray]) -> np.ndarray:
         ids = np.asarray(ids, dtype=np.int64)
@@ -259,11 +279,26 @@ class MutableTable:
             db = MultiVectorDatabase(cols, list(self.base.names))
         return db, ids
 
+    def snapshot(self) -> tuple[MultiVectorDatabase, np.ndarray, int]:
+        """(materialized live db, stable ids, cut LSN) in ONE lock hold —
+        the async compactor's cut: everything below the returned LSN is in
+        the snapshot, everything at/above it must be replayed at rebase."""
+        with self._lock:
+            db, ids = self.materialize()
+            return db, ids, self.log.next_lsn
+
     def rebase(self, db: MultiVectorDatabase, ids: np.ndarray,
-               upto_lsn: int | None = None) -> None:
+               upto_lsn: int | None = None, replay=()) -> None:
         """Swap in a compacted snapshot: the delta and tombstones it folded
         are cleared, the log truncated to the compaction cut, and stable
-        ids carried over — external references survive the rebase."""
+        ids carried over — external references survive the rebase.
+
+        ``replay`` re-applies post-cut ``LogRecord``s (in LSN order) onto
+        the new base WITHOUT re-logging them — they are still in the live
+        log after the truncate. This is the async-compaction rebase: the
+        snapshot was cut at ``upto_lsn`` while mutations kept landing; the
+        replayed table is identical to one that applied those batches
+        directly (same stable ids, same delta order, same tombstones)."""
         with self._lock:
             upto = self.log.next_lsn if upto_lsn is None else upto_lsn
             self.base = db
@@ -284,7 +319,32 @@ class MutableTable:
                               for c in db.columns]
             self._delta_cache = None
             self.log.truncate(upto)
+            for rec in replay:
+                self._replay(rec)
             self.version += 1
+
+    def _replay(self, rec) -> None:
+        """Redo one vector-carrying log record on the current state."""
+        if rec.kind == "insert":
+            if rec.vectors is None:
+                raise ValueError(f"lsn {rec.lsn}: insert record carries no "
+                                 "vectors — cannot replay")
+            blocks = _as_blocks(rec.vectors, self.dims())
+            self._append_delta(blocks, np.asarray(rec.ids, dtype=np.int64))
+            if rec.ids.size:
+                self.next_id = max(self.next_id, int(rec.ids.max()) + 1)
+        elif rec.kind == "delete":
+            ids = rec.applied_ids if rec.applied_ids is not None else rec.ids
+            for i in ids:
+                self._kill(int(i))
+        elif rec.kind == "upsert":
+            if rec.vectors is None:
+                raise ValueError(f"lsn {rec.lsn}: upsert record carries no "
+                                 "vectors — cannot replay")
+            blocks = _as_blocks(rec.vectors, self.dims())
+            self._upsert(np.asarray(rec.ids, dtype=np.int64), blocks)
+        else:
+            raise ValueError(f"lsn {rec.lsn}: unknown record kind {rec.kind!r}")
 
     def stats(self) -> dict:
         return {"n_base": self.n_base, "n_delta": self.n_delta,

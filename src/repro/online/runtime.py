@@ -19,6 +19,7 @@ import threading
 import time
 from dataclasses import dataclass
 
+from repro.async_.executor import WorkerPool
 from repro.core.types import Constraints, Query, QueryPlan, TuningResult, Workload
 from repro.index.registry import IndexStore
 from repro.online.monitor import (DriftDetector, WorkloadMonitor,
@@ -38,8 +39,16 @@ class RuntimeConfig:
     min_window: int = 64       # queries required before drift can fire
     drift_threshold: float = 0.35
     cooldown_s: float = 60.0   # min spacing between retunes
-    retune_mode: str = "sync"  # "sync" | "thread"
+    retune_mode: str = "sync"  # "sync" | "thread" | "pool" (DESIGN.md §10)
     measure: bool = False      # True: ExecutionMetrics per ticket (bench)
+    # async pipeline (DESIGN.md §10). ``async_flush`` hands flush execution
+    # to a worker pool (tickets become futures); sync flush stays the
+    # bit-identical baseline. ``workers`` sizes the pool the runtime
+    # creates when no executor is passed in; ``stage_transfers`` overlaps
+    # the next batch's host→device uploads with the current dispatch.
+    async_flush: bool = False
+    workers: int = 2
+    stage_transfers: bool = True
 
 
 class OnlineRuntime:
@@ -49,11 +58,18 @@ class OnlineRuntime:
                  result: TuningResult | None = None,
                  store: IndexStore | None = None,
                  engine: BatchEngine | None = None,
-                 config: RuntimeConfig | None = None):
+                 config: RuntimeConfig | None = None,
+                 executor=None):
         self.db = db
         self.mint = mint
         self.constraints = constraints
         self.config = config or RuntimeConfig()
+        # one executor serves BOTH async flushes and background builds
+        # (retunes, compactions); tests inject a StepExecutor here
+        self.executor = executor
+        self._own_executor = False
+        if self.config.async_flush or self.config.retune_mode == "pool":
+            self._ensure_executor()
         self.result = result if result is not None else mint.tune(workload, constraints)
         self.store = store or IndexStore(db, seed=mint.seed)
         self.engine = engine or BatchEngine(db, store=self.store)
@@ -67,10 +83,15 @@ class OnlineRuntime:
                                       threshold=self.config.drift_threshold,
                                       min_window=self.config.min_window)
         self.retuner = BackgroundRetuner(self, cooldown_s=self.config.cooldown_s,
-                                         mode=self.config.retune_mode)
+                                         mode=self.config.retune_mode,
+                                         executor=self.executor)
+        flush_exec = self.executor if self.config.async_flush else None
+        stage = (self._stage if flush_exec is not None
+                 and self.config.stage_transfers else None)
         self.batcher = MicroBatcher(self._execute, self.plan_for,
                                     max_batch=self.config.max_batch,
-                                    max_delay_ms=self.config.max_delay_ms)
+                                    max_delay_ms=self.config.max_delay_ms,
+                                    executor=flush_exec, stage=stage)
         self._swap_lock = threading.Lock()
 
     # ---- request path -----------------------------------------------------
@@ -175,8 +196,29 @@ class OnlineRuntime:
 
     # ---- execution --------------------------------------------------------
 
-    def _execute(self, tickets: list[Ticket]) -> list:
+    def _ensure_executor(self, name: str = "runtime"):
+        """The runtime's single owned-pool creation point: used at init
+        (async flush / pool retunes) and lazily by subclasses that only
+        need async BUILDS (e.g. async compaction with sync flush)."""
+        if self.executor is None:
+            self.executor = WorkerPool(workers=self.config.workers,
+                                       name=name)
+            self._own_executor = True
+        return self.executor
+
+    def close(self) -> None:
+        """Drain in-flight work and shut down an owned worker pool."""
+        self.batcher.drain()
+        self.retuner.join()
+        if self._own_executor and self.executor is not None:
+            self.executor.shutdown(wait=True)
+
+    def _stage(self, tickets: list[Ticket]):
+        pairs = [(t.query, t.plan) for t in tickets]
+        return self.engine.stage_batch(pairs)
+
+    def _execute(self, tickets: list[Ticket], staged=None) -> list:
         pairs = [(t.query, t.plan) for t in tickets]
         if self.config.measure:
-            return self.engine.execute_batch(pairs)
-        return self.engine.search_batch(pairs)
+            return self.engine.execute_batch(pairs, staged=staged)
+        return self.engine.search_batch(pairs, staged=staged)

@@ -24,8 +24,20 @@ queue; ``poll`` flushes at most ONE batch per call (size or deadline
 triggered), so the caller's poll cadence is the service rate and backlog
 can exceed ``max_batch`` — the regime where fairness matters.
 
+Async execution (DESIGN.md §10): with an ``executor`` attached, a flush
+only SELECTS its batch under the lock — execution is handed to the worker
+pool and the selected tickets become futures (``Ticket.result(timeout=...)``
+blocks until their batch completes, re-raising worker crashes). The
+optional ``stage`` hook runs on the SUBMITTING thread right before the
+hand-off, so the next batch's host→device transfers overlap the kernel
+dispatch of whatever batch a worker is currently running. Without an
+executor (``sync`` mode) behavior is bit-identical to the pre-async
+batcher: flushes execute inline on the submitting thread.
+
 Time is explicit (``now`` in seconds) so schedules are deterministic and
-simulation-driven; wall clock is used when ``now`` is omitted.
+simulation-driven; wall clock is used when ``now`` is omitted. Tickets
+additionally carry wall-clock submit/done stamps (``wall_wait_ms``) so
+latency benches stay meaningful under virtual-time traces.
 """
 from __future__ import annotations
 
@@ -37,6 +49,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.async_.executor import drive_until
 from repro.core.types import DEFAULT_TENANT, Query, QueryPlan, TenantId
 
 
@@ -52,6 +65,11 @@ class Ticket:
     ids: np.ndarray | None = None
     metrics: object | None = None  # ExecutionMetrics when measuring
     batch_size: int = 0            # size of the micro-batch it flushed in
+    flushed: bool = False          # selected into a flush (async: may still
+                                   # be executing — ``done`` is completion)
+    future: object | None = None   # async_.Future of its flush job
+    t_submit_wall: float = 0.0     # wall-clock twins of t_submit/t_done
+    t_done_wall: float | None = None
 
     @property
     def done(self) -> bool:
@@ -60,6 +78,33 @@ class Ticket:
     @property
     def wait_ms(self) -> float:
         return ((self.t_done or self.t_submit) - self.t_submit) * 1e3
+
+    @property
+    def wall_wait_ms(self) -> float:
+        """Submit→done latency on the WALL clock (virtual-time traces give
+        ``wait_ms`` in trace time; this one is what a client would see)."""
+        end = self.t_done_wall if self.t_done_wall is not None \
+            else self.t_submit_wall
+        return (end - self.t_submit_wall) * 1e3
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """True once the ticket's flush has completed (or failed)."""
+        if self.future is not None:
+            return self.future.wait(timeout)
+        return self.done
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        """Block until the flush lands and return the top-k ids. Raises
+        ``TimeoutError`` if the batch has not completed in time,
+        ``WorkerCrashed``/``PoolShutdown`` if the flush was lost, or the
+        execution error itself if the engine raised."""
+        if self.future is not None:
+            self.future.result(timeout)
+            return self.ids
+        if not self.done:
+            raise TimeoutError("ticket pending and no flush in flight "
+                               "(sync batcher: poll/drain to flush)")
+        return self.ids
 
 
 @dataclass
@@ -83,6 +128,16 @@ class BatcherStats:
                 "tenant_queries": dict(sorted(self.tenant_queries.items()))}
 
 
+@dataclass
+class _FlushJob:
+    """One selected micro-batch handed to the worker pool."""
+
+    tickets: list
+    now: float            # flush (virtual) time — becomes t_done
+    future: object | None = None
+    staged: object | None = None
+
+
 class MicroBatcher:
     """Deadline/size-triggered micro-batching over an execute callback.
 
@@ -101,7 +156,8 @@ class MicroBatcher:
                  plan_for: Callable[[Query], QueryPlan],
                  max_batch: int = 32, max_delay_ms: float = 5.0,
                  quantum: int = 1, fair: bool = True,
-                 auto_flush: bool = True):
+                 auto_flush: bool = True, executor=None,
+                 stage: Callable[[list[Ticket]], object] | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if quantum < 1:
@@ -113,6 +169,14 @@ class MicroBatcher:
         self.quantum = quantum
         self.fair = fair
         self.auto_flush = auto_flush
+        # async flush (DESIGN.md §10): executor runs flushes off the
+        # submitting thread; stage(tickets) pre-uploads the batch's
+        # host→device transfers on the submitting thread first. With an
+        # executor attached, ``execute`` is called as
+        # ``execute(tickets, staged)`` when a stage hook exists.
+        self.executor = executor
+        self.stage = stage
+        self._inflight: list[_FlushJob] = []
         self.stats = BatcherStats()
         self._queues: dict[TenantId, deque[Ticket]] = {}
         self._ring: deque[TenantId] = deque()      # active tenants, RR order
@@ -140,11 +204,13 @@ class MicroBatcher:
                tenant: TenantId = DEFAULT_TENANT,
                plan: QueryPlan | None = None) -> Ticket:
         now = time.time() if now is None else now
+        t_wall = time.time()  # arrival stamp BEFORE the lock: a submitter
+        # blocked behind a stop-the-world hold is measured as waiting
         with self.lock:
             if plan is None:
                 plan = self.plan_for(query)
             ticket = Ticket(query=query, plan=plan, t_submit=now,
-                            tenant=tenant)
+                            tenant=tenant, t_submit_wall=t_wall)
             q = self._queues.get(tenant)
             if q is None:
                 q = self._queues[tenant] = deque()
@@ -161,37 +227,57 @@ class MicroBatcher:
     def poll(self, now: float | None = None) -> list[Ticket]:
         """Flush at most one batch: when the oldest pending request has
         exceeded the deadline, or (``auto_flush=False`` service mode) when a
-        full batch is waiting. Returns the tickets completed by this call."""
+        full batch is waiting. Returns the tickets completed by this call
+        (async mode: whatever in-flight batches have landed since the last
+        harvest — flushing and completing are decoupled there)."""
         now = time.time() if now is None else now
         with self.lock:
-            if not self._n_pending:
-                return []
-            oldest = self._oldest_submit()
-            if oldest is not None and (now - oldest) * 1e3 >= self.max_delay_ms:
-                return self._flush(now, "deadline")
-            if not self.auto_flush and self._n_pending >= self.max_batch:
-                return self._flush(now, "size")
-        return []
+            flushed: list[Ticket] = []
+            if self._n_pending:
+                oldest = self._oldest_submit()
+                if oldest is not None and \
+                        (now - oldest) * 1e3 >= self.max_delay_ms:
+                    flushed = self._flush(now, "deadline")
+                elif not self.auto_flush and self._n_pending >= self.max_batch:
+                    flushed = self._flush(now, "size")
+            if self.executor is None:
+                return flushed
+            return self._harvest(block=False)
 
     def drain(self, now: float | None = None) -> list[Ticket]:
         """Force-flush everything pending (shutdown / end of trace), in
-        batches of at most ``max_batch``."""
+        batches of at most ``max_batch``. In async mode this BLOCKS until
+        every in-flight flush has completed — after drain() returns there
+        is no execution in flight, which is what the runtime's swap paths
+        rely on (workers never take the batcher lock, so waiting while
+        holding it cannot deadlock)."""
         now = time.time() if now is None else now
         out: list[Ticket] = []
         with self.lock:
             while self._n_pending:
                 out.extend(self._flush(now, "forced"))
+            if self.executor is not None:
+                return self._harvest(block=True)
         return out
+
+    def sync_inflight(self) -> list[Ticket]:
+        """Block until every in-flight async flush lands (no-op when sync)."""
+        with self.lock:
+            return self._harvest(block=True)
+
+    def inflight(self) -> int:
+        return len(self._inflight)
 
     # ---- internals (caller must hold ``self.lock``) -----------------------
 
     def _oldest_submit(self) -> float | None:
-        while self._arrivals and self._arrivals[0].done:
-            self._arrivals.popleft()  # lazily discard flushed tickets
+        while self._arrivals and self._arrivals[0].flushed:
+            self._arrivals.popleft()  # lazily discard selected tickets
         return self._arrivals[0].t_submit if self._arrivals else None
 
     def _take(self, tenant: TenantId) -> Ticket:
         ticket = self._queues[tenant].popleft()
+        ticket.flushed = True
         self._n_pending -= 1
         return ticket
 
@@ -234,7 +320,44 @@ class MicroBatcher:
 
     def _flush(self, now: float, reason: str) -> list[Ticket]:
         batch = self._select(min(self.max_batch, self._n_pending))
-        results = self.execute(batch)
+        # flush accounting happens at SELECTION time (under the lock) so
+        # async workers never touch shared stats — only their own job
+        for ticket in batch:
+            self.stats.tenant_queries[ticket.tenant] = \
+                self.stats.tenant_queries.get(ticket.tenant, 0) + 1
+        self.stats.batches += 1
+        self.stats.queries += len(batch)
+        setattr(self.stats, f"flush_{reason}",
+                getattr(self.stats, f"flush_{reason}") + 1)
+        if self.executor is None:
+            self._apply_results(batch, self.execute(batch), now)
+            return batch
+        job = _FlushJob(tickets=batch, now=now)
+        if self.stage is not None:
+            # submitting-thread staging: the next batch's host→device
+            # uploads dispatch NOW, overlapping whatever kernel a worker
+            # is currently running (jax dispatch is async per thread)
+            job.staged = self.stage(batch)
+        job.future = self.executor.submit(self._run_job, job,
+                                          label=f"flush:{reason}")
+        for ticket in batch:
+            ticket.future = job.future
+        self._inflight.append(job)
+        return batch
+
+    def _run_job(self, job: _FlushJob) -> int:
+        """Worker-side flush execution. Touches only the job's own tickets;
+        needs no batcher lock (drain may hold it while waiting on us)."""
+        if self.stage is not None:
+            results = self.execute(job.tickets, job.staged)
+        else:
+            results = self.execute(job.tickets)
+        self._apply_results(job.tickets, results, job.now)
+        return len(job.tickets)
+
+    @staticmethod
+    def _apply_results(batch: list[Ticket], results: list, now: float) -> None:
+        t_wall = time.time()
         for ticket, res in zip(batch, results):
             if hasattr(res, "ids"):  # ExecutionMetrics
                 ticket.metrics = res
@@ -242,11 +365,21 @@ class MicroBatcher:
             else:
                 ticket.ids = res
             ticket.t_done = now
+            ticket.t_done_wall = t_wall
             ticket.batch_size = len(batch)
-            self.stats.tenant_queries[ticket.tenant] = \
-                self.stats.tenant_queries.get(ticket.tenant, 0) + 1
-        self.stats.batches += 1
-        self.stats.queries += len(batch)
-        setattr(self.stats, f"flush_{reason}",
-                getattr(self.stats, f"flush_{reason}") + 1)
-        return batch
+
+    def _harvest(self, block: bool) -> list[Ticket]:
+        """Collect tickets of landed flush jobs (async mode). ``block``
+        waits for every in-flight job; tickets of failed jobs are returned
+        too — their futures re-raise from ``Ticket.result``."""
+        out: list[Ticket] = []
+        keep: list[_FlushJob] = []
+        for job in self._inflight:
+            if block:
+                drive_until(self.executor, job.future)
+            if job.future.done():
+                out.extend(job.tickets)
+            else:
+                keep.append(job)
+        self._inflight = keep
+        return out

@@ -63,6 +63,25 @@ _DEAD_CUT = NEG_INF / 2
 
 
 @dataclass
+class StagedBatch:
+    """Pre-staged device state for one micro-batch (DESIGN.md §10).
+
+    ``stage_batch`` compiles the plan groups and dispatches every
+    host→device transfer the batch will need — resident columns touched,
+    padded query matrices uploaded — WITHOUT running any kernel. The async
+    flush path stages batch N+1 on the submitting thread while a worker
+    runs batch N's kernels, overlapping transfer with compute; execution
+    then reuses the staged groups/qmats (same values, so results are
+    bit-identical to an unstaged run). qmats are advisory: execution
+    revalidates shapes against the live column store and recomputes on
+    mismatch (a store swap may land between staging and execution)."""
+
+    n: int                                   # batch size staged for
+    groups: list[PlanGroup]
+    qmats: dict[tuple, jnp.ndarray]          # (group_idx, slot) -> device qmat
+
+
+@dataclass
 class DispatchCounters:
     """Kernel-dispatch accounting: ``scan`` counts ONE per (group, index)
     batched dispatch (flat fused_scan or IVF probe), ``delta`` one per
@@ -152,23 +171,75 @@ class BatchEngine:
         mv = self.mview
         return mv if mv is not None and mv.mutated() else None
 
-    def search_batch(self, pairs: list[tuple[Query, QueryPlan]]) -> list[np.ndarray]:
+    def stage_batch(self, pairs: list[tuple[Query, QueryPlan]]) -> StagedBatch:
+        """Compile the batch and dispatch its host→device transfers now
+        (async flush pipelining). Pure staging: no kernel runs, no counter
+        moves, no serving state changes — safe to call from the submitting
+        thread while a worker executes the previous batch."""
+        groups = compile_batch(pairs)
+        qmats: dict[tuple, jnp.ndarray] = {}
+        for gi, group in enumerate(groups):
+            items = group.items
+            if not group.specs:
+                col = self.cstore.device(group.key.vid)
+                qmats[(gi, -1)] = col.pad_queries(
+                    np.stack([it.query.concat() for it in items]))
+                continue
+            for j, spec in enumerate(group.specs):
+                kind = spec.kind if self.store is not None else "flat"
+                if kind in ("flat", "ivf"):
+                    col = self.cstore.device(spec.vid)
+                    qmats[(gi, j)] = col.pad_queries(
+                        np.stack([it.query.concat(spec.vid) for it in items]))
+            if not group.single_exact:
+                col = self.cstore.device(group.key.vid)
+                qmats[(gi, "rerank")] = col.pad_queries(
+                    np.stack([it.query.concat() for it in items]))
+        return StagedBatch(n=len(pairs), groups=groups, qmats=qmats)
+
+    def _staged_groups(self, pairs, staged: StagedBatch | None):
+        """(groups, per-group staged-qmat dicts) — falling back to a fresh
+        compile when the staged batch doesn't match the pairs."""
+        if staged is not None and staged.n == len(pairs):
+            sqs = [{} for _ in staged.groups]
+            for (gi, slot), qmat in staged.qmats.items():
+                sqs[gi][slot] = qmat
+            return staged.groups, sqs
+        groups = compile_batch(pairs)
+        return groups, [None] * len(groups)
+
+    def _staged_qmat(self, sq, slot, col: DeviceColumn):
+        """A staged qmat for this slot, if it still matches the live column
+        store's padded width (a swap between staging and execution changes
+        ``cstore``; values are recomputed then)."""
+        if sq is None:
+            return None
+        qmat = sq.get(slot)
+        if qmat is not None and qmat.shape[1] == col.padded_dim:
+            return qmat
+        return None
+
+    def search_batch(self, pairs: list[tuple[Query, QueryPlan]],
+                     staged: StagedBatch | None = None) -> list[np.ndarray]:
         """Serving form: top-k ids per query, in batch order."""
         out: list[np.ndarray | None] = [None] * len(pairs)
-        for group in compile_batch(pairs):
-            ids_list, _, _, _ = self._run_group(group)
+        groups, sqs = self._staged_groups(pairs, staged)
+        for group, sq in zip(groups, sqs):
+            ids_list, _, _, _ = self._run_group(group, sq=sq)
             for item, ids in zip(group.items, ids_list):
                 out[item.pos] = ids
         return out  # type: ignore[return-value]
 
     def execute_batch(self, pairs: list[tuple[Query, QueryPlan]],
-                      gt_cache: dict[int, np.ndarray] | None = None) -> list:
+                      gt_cache: dict[int, np.ndarray] | None = None,
+                      staged: StagedBatch | None = None) -> list:
         """Measurement form: ``ExecutionMetrics`` per query, batch order."""
         from repro.core.tuner import ExecutionMetrics  # metrics stay in core
         out = [None] * len(pairs)
-        for group in compile_batch(pairs):
+        groups, sqs = self._staged_groups(pairs, staged)
+        for group, sq in zip(groups, sqs):
             t0 = time.time()
-            ids_list, costs, ndists, eks_maps = self._run_group(group)
+            ids_list, costs, ndists, eks_maps = self._run_group(group, sq=sq)
             gts = self._group_ground_truth(group, gt_cache)
             wall = (time.time() - t0) * 1e3 / max(group.batch, 1)
             for item, ids, cost, nd, eks, gt in zip(
@@ -200,7 +271,7 @@ class BatchEngine:
 
     # ---- group execution --------------------------------------------------
 
-    def _run_group(self, group: PlanGroup):
+    def _run_group(self, group: PlanGroup, sq: dict | None = None):
         specs, buckets = group.specs, group.buckets
         items = group.items
         B = len(items)
@@ -211,8 +282,10 @@ class BatchEngine:
 
         if not specs:  # flat-scan fallback group (no useful index / all ek=0)
             col = self.cstore.device(group.key.vid)
-            qmat = col.pad_queries(
-                np.stack([it.query.concat() for it in items]))
+            qmat = self._staged_qmat(sq, -1, col)
+            if qmat is None:
+                qmat = col.pad_queries(
+                    np.stack([it.query.concat() for it in items]))
             if mv is None:
                 ids = self._flat_scan(col, qmat, min(group.max_k, col.n_rows))
                 out_ids = []
@@ -249,11 +322,13 @@ class BatchEngine:
             scored: list | None = [None] * B if mv is not None else None
             if kind == "ivf":
                 self._ivf_scan(group, spec, j, cand, costs, ndists,
-                               mv=mv, scored=scored)
+                               mv=mv, scored=scored, sq=sq)
             elif kind == "flat":
                 col = self.cstore.device(spec.vid)
-                qmat = col.pad_queries(
-                    np.stack([it.query.concat(spec.vid) for it in items]))
+                qmat = self._staged_qmat(sq, j, col)
+                if qmat is None:
+                    qmat = col.pad_queries(
+                        np.stack([it.query.concat(spec.vid) for it in items]))
                 if mv is None:
                     ids = self._flat_scan(col, qmat, min(bucket, col.n_rows))
                     for i, it in enumerate(items):
@@ -297,7 +372,7 @@ class BatchEngine:
             out_ids = [cand[i][0][: items[i].query.k] for i in range(B)]
             return out_ids, costs, ndists, eks_maps
 
-        out_ids = self._rerank(group, cand, mv=mv)
+        out_ids = self._rerank(group, cand, mv=mv, sq=sq)
         for i, it in enumerate(items):
             total_ek = int(sum(it.eks))  # duplicates counted — Eq. 6
             costs[i] += float(it.query.dim() * total_ek)
@@ -401,7 +476,7 @@ class BatchEngine:
         return ids[order].astype(np.int64)
 
     def _ivf_scan(self, group: PlanGroup, spec, j: int, cand, costs, ndists,
-                  mv=None, scored=None):
+                  mv=None, scored=None, sq: dict | None = None):
         """Batched IVF probe: one centroid-scoring dispatch for the whole
         group, then one gathered-row scoring dispatch over the padded probe
         union. Per-query nprobe / top-ek use each query's ACTUAL ek so the
@@ -412,8 +487,10 @@ class BatchEngine:
         idx = self.store.get(spec)
         items = group.items
         col = self.cstore.device(spec.vid)
-        qmat = col.pad_queries(
-            np.stack([it.query.concat(spec.vid) for it in items]))
+        qmat = self._staged_qmat(sq, j, col)
+        if qmat is None:
+            qmat = col.pad_queries(
+                np.stack([it.query.concat(spec.vid) for it in items]))
         cent = np.asarray(idx.centroids, dtype=np.float32)
         if col.padded_dim != cent.shape[1]:
             cent = np.pad(cent, ((0, 0), (0, col.padded_dim - cent.shape[1])))
@@ -459,7 +536,8 @@ class BatchEngine:
             else:
                 cand[i][j] = rows[sel]
 
-    def _rerank(self, group: PlanGroup, cand, mv=None) -> list[np.ndarray]:
+    def _rerank(self, group: PlanGroup, cand, mv=None,
+                sq: dict | None = None) -> list[np.ndarray]:
         """Full-score rerank over each query's candidate union, batched as
         ONE ``batched_scores`` dispatch over the group-wide union; per-query
         selection slices its own candidates (sorted ids + stable ordering —
@@ -477,7 +555,10 @@ class BatchEngine:
         if not nonempty:
             return [np.empty(0, np.int64) for _ in items]
         gunion = np.unique(np.concatenate(nonempty))
-        qmat = col.pad_queries(np.stack([it.query.concat() for it in items]))
+        qmat = self._staged_qmat(sq, "rerank", col)
+        if qmat is None:
+            qmat = col.pad_queries(
+                np.stack([it.query.concat() for it in items]))
         if mv is None:
             sub = col.data[jnp.asarray(gunion.astype(np.int32))]
             scores = np.asarray(self._batched_scores(qmat, sub))

@@ -23,6 +23,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, replace as dc_replace
 
+from repro.async_.executor import WorkerPool
 from repro.core.tuner import (JointTuningResult, Mint, TenantTask,
                               tune_tenants)
 from repro.core.types import (Constraints, Query, QueryPlan, TenantId,
@@ -33,7 +34,10 @@ from repro.ingest.compactor import (CompactionPolicy, CompactionStats,
 from repro.ingest.delta import MutationView
 from repro.ingest.drift import DataDriftDetector
 from repro.ingest.table import MutableTable
+from repro.online.monitor import (DriftDetector, WorkloadMonitor,
+                                  reference_histogram)
 from repro.online.plancache import PlanCache, constraints_fingerprint
+from repro.online.retuner import BackgroundRetuner, RetuneEvent
 from repro.online.runtime import RuntimeConfig
 from repro.online.scheduler import MicroBatcher, Ticket
 from repro.online.trace import TimedMutation, TimedQuery
@@ -75,11 +79,78 @@ class _TenantState:
         self.view: MutationView | None = None
         self.compactor: Compactor | None = None
         self.detector: DataDriftDetector | None = None
+        # query-drift loop (enable_drift_loop): per-tenant monitor +
+        # detector + BackgroundRetuner on the shared pool
+        self.retune_proxy: "_TenantRetuneProxy | None" = None
+        self.retuner: BackgroundRetuner | None = None
 
 
 def _no_default_plan(query: Query) -> QueryPlan:
     raise RuntimeError("MultiTenantRuntime resolves plans per tenant; "
                        "submit() must pass the tenant id")
+
+
+class _TenantCacheView:
+    """The shared plan cache, scoped to one tenant (the retuner's probe
+    surface: ``peek`` + the tenant's own generation)."""
+
+    def __init__(self, cache: PlanCache, tenant: TenantId):
+        self._cache = cache
+        self._tenant = tenant
+
+    def peek(self, query: Query) -> QueryPlan | None:
+        return self._cache.peek(query, tenant=self._tenant)
+
+    @property
+    def generation(self) -> int:
+        return self._cache.generation_of(self._tenant)
+
+
+class _TenantRetuneProxy:
+    """Adapter exposing ONE tenant of a MultiTenantRuntime through the
+    single-tenant surface ``BackgroundRetuner`` drives (DESIGN.md §10):
+    reads resolve to the tenant's live state, and the swap lands through
+    ``swap_tenant`` — tenant-scoped generation bump + template re-seed +
+    store prune, other tenants untouched. Each tenant gets its own monitor
+    and drift detector, so tenants re-tune on their OWN drift signals;
+    the tune + shadow-build run on the runtime's shared worker pool, so
+    one tenant's retune never blocks another tenant's flushes."""
+
+    def __init__(self, runtime: "MultiTenantRuntime", tenant: TenantId,
+                 monitor: WorkloadMonitor, detector: DriftDetector):
+        self._rt = runtime
+        self._tenant = tenant
+        self.monitor = monitor
+        self.detector = detector
+        self.cache = _TenantCacheView(runtime.cache, tenant)
+
+    @property
+    def _state(self) -> "_TenantState":
+        return self._rt.state(self._tenant)
+
+    @property
+    def db(self):
+        return self._state.spec.db
+
+    @property
+    def mint(self) -> Mint:
+        return self._state.spec.mint
+
+    @property
+    def constraints(self) -> Constraints:
+        return self._state.spec.constraints
+
+    @property
+    def result(self) -> TuningResult:
+        return self._state.result
+
+    @property
+    def store(self):
+        return self._state.store
+
+    def swap(self, result: TuningResult, observed: Workload,
+             now: float | None = None) -> int:
+        return self._rt.swap_tenant(self._tenant, result, observed, now=now)
 
 
 class MultiTenantRuntime:
@@ -89,10 +160,15 @@ class MultiTenantRuntime:
                  config: RuntimeConfig | None = None,
                  plan_cache_capacity: int | None = None,
                  fair: bool = True, auto_flush: bool = True,
-                 quantum: int = 1):
+                 quantum: int = 1, executor=None):
         if not tenants:
             raise ValueError("need at least one tenant")
         self.config = config or RuntimeConfig()
+        # shared pool: async flushes + every tenant's background retunes
+        self.executor = executor
+        self._own_executor = False
+        if self.executor is None and self.config.async_flush:
+            self._ensure_executor()
         self.governor = MemoryGovernor(budget_bytes)
         self.cstores = TenantColumnStores(self.governor)
         self.istores = TenantIndexStores()
@@ -106,11 +182,20 @@ class MultiTenantRuntime:
             self.cache.register_tenant(
                 spec.tenant_id, constraints_fingerprint(spec.constraints))
             self.cache.seed(spec.workload, st.result, tenant=spec.tenant_id)
+        flush_exec = self.executor if self.config.async_flush else None
         self.batcher = MicroBatcher(self._execute, _no_default_plan,
                                     max_batch=self.config.max_batch,
                                     max_delay_ms=self.config.max_delay_ms,
                                     quantum=quantum, fair=fair,
-                                    auto_flush=auto_flush)
+                                    auto_flush=auto_flush,
+                                    executor=flush_exec)
+
+    def _ensure_executor(self) -> WorkerPool:
+        if self.executor is None:
+            self.executor = WorkerPool(workers=self.config.workers,
+                                       name="tenants")
+            self._own_executor = True
+        return self.executor
 
     def tenants(self) -> list[TenantId]:
         return sorted(self._tenants)
@@ -133,6 +218,9 @@ class MultiTenantRuntime:
     def submit(self, tenant: TenantId, query: Query,
                now: float | None = None) -> Ticket:
         now = time.time() if now is None else now
+        st = self._tenants[tenant]
+        if st.retune_proxy is not None:
+            st.retune_proxy.monitor.observe(query)
         # plan resolution + enqueue under the batcher lock, so a concurrent
         # swap of THIS tenant can never interleave between them
         with self.batcher.lock:
@@ -140,7 +228,19 @@ class MultiTenantRuntime:
             return self.batcher.submit(query, now, tenant=tenant, plan=plan)
 
     def tick(self, now: float | None = None) -> list[Ticket]:
-        return self.batcher.poll(time.time() if now is None else now)
+        """Advance the serving loop: flush/harvest due batches, then give
+        every tenant's drift loop a chance — finalizing completed pool
+        retunes (the swap runs here, on the serving thread) and firing new
+        ones on drifted tenants. A tenant mid-retune never blocks another
+        tenant's flushes: the tune+build runs on the pool, and this loop
+        only pays the per-tenant drain+swap when a result is ready."""
+        now = time.time() if now is None else now
+        done = self.batcher.poll(now)
+        for tid in self.tenants():
+            st = self._tenants[tid]
+            if st.retuner is not None:
+                st.retuner.maybe_retune(now)
+        return done
 
     def drain(self, now: float | None = None) -> list[Ticket]:
         return self.batcher.drain(now)
@@ -156,8 +256,63 @@ class MultiTenantRuntime:
             else:
                 tickets.append(self.submit(tq.tenant, tq.query, tq.t))
             self.tick(tq.t)
-        self.drain(trace[-1].t if trace else 0.0)
+        last = trace[-1].t if trace else 0.0
+        self.drain(last)
+        self.join_drift_loops(now=last)
         return tickets
+
+    # ---- per-tenant query-drift loops (DESIGN.md §10) ----------------------
+
+    def enable_drift_loop(self, tenant: TenantId, window: int | None = None,
+                          min_window: int | None = None,
+                          drift_threshold: float | None = None,
+                          cooldown_s: float | None = None,
+                          mode: str | None = None,
+                          reps_per_vid: int = 3) -> BackgroundRetuner:
+        """Give one tenant its own drift → retune → swap lifecycle: a
+        private WorkloadMonitor + DriftDetector (referenced on the tenant's
+        tuned workload mix) driving a BackgroundRetuner whose tune + shadow
+        build run on the runtime's shared worker pool (``mode='pool'``
+        whenever an executor exists, else inline). Knobs default to the
+        RuntimeConfig values."""
+        st = self._tenants[tenant]
+        if st.retuner is not None:
+            raise ValueError(f"tenant {tenant!r} already has a drift loop")
+        cfg = self.config
+        proxy = _TenantRetuneProxy(
+            self, tenant,
+            monitor=WorkloadMonitor(window=window or cfg.window),
+            detector=DriftDetector(
+                reference_histogram(st.spec.workload),
+                threshold=(cfg.drift_threshold if drift_threshold is None
+                           else drift_threshold),
+                min_window=cfg.min_window if min_window is None else min_window))
+        if mode is None:
+            mode = "pool" if self.executor is not None else "sync"
+        st.retune_proxy = proxy
+        st.retuner = BackgroundRetuner(
+            proxy, cooldown_s=cfg.cooldown_s if cooldown_s is None else cooldown_s,
+            mode=mode, reps_per_vid=reps_per_vid, executor=self.executor)
+        return st.retuner
+
+    def join_drift_loops(self, now: float | None = None,
+                         timeout: float | None = None) -> None:
+        """Wait for (and finalize) every tenant's in-flight retune."""
+        for tid in self.tenants():
+            st = self._tenants[tid]
+            if st.retuner is not None:
+                st.retuner.join(timeout=timeout, now=now)
+
+    def retune_events(self, tenant: TenantId) -> list[RetuneEvent]:
+        st = self._tenants[tenant]
+        return st.retuner.events if st.retuner is not None else []
+
+    def close(self) -> None:
+        """Drain in-flight work and shut down an owned worker pool."""
+        self.drain()
+        self.join_drift_loops()
+        if self._own_executor and self.executor is not None:
+            self.executor.shutdown(wait=True)
 
     # ---- mutation path (per-tenant ingest) --------------------------------
 
@@ -193,9 +348,11 @@ class MultiTenantRuntime:
 
     def mutate(self, tenant: TenantId, mutation):
         """Apply one typed mutation batch to a tenant's table, serialized
-        against flushes (same ordering rule as single-tenant ingest)."""
+        against flushes (same ordering rule as single-tenant ingest:
+        in-flight async batches complete before the mutation lands)."""
         st = self._ingest_state(tenant)
         with self.batcher.lock:
+            self.batcher.sync_inflight()
             return st.table.apply(mutation)
 
     def apply_timed(self, tm: TimedMutation) -> None:
@@ -313,17 +470,20 @@ class MultiTenantRuntime:
                       "store": st.store.stats(),
                       "resident_vids": st.cstore.resident(),
                       "device_bytes": self.governor.tenant_bytes(tid),
-                      "table": st.table.stats() if st.table else None}
+                      "table": st.table.stats() if st.table else None,
+                      "retunes": (len(st.retuner.events)
+                                  if st.retuner is not None else None)}
                 for tid, st in sorted(self._tenants.items())
             },
         }
 
     # ---- execution --------------------------------------------------------
 
-    def _execute(self, tickets: list[Ticket]) -> list:
+    def _execute(self, tickets: list[Ticket], staged=None) -> list:
         """Route each flushed ticket to its tenant's engine (mixed batches
         split per tenant — plan-group compilation happens per tenant since
-        vids/specs from different databases must never share a dispatch)."""
+        vids/specs from different databases must never share a dispatch;
+        staging is a single-engine optimization, unused here)."""
         out: list = [None] * len(tickets)
         by_tenant: dict[TenantId, list[int]] = {}
         for i, t in enumerate(tickets):

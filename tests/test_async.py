@@ -1,0 +1,637 @@
+"""Concurrency harness for the async serving pipeline (DESIGN.md §10).
+
+Three layers of guarantees, each deterministic:
+
+  - executor substrate: bounded worker pool semantics (crash isolation,
+    worker replacement, clean shutdown mid-flush — pending futures fail
+    with PoolShutdown instead of deadlocking), the seeded StepExecutor
+    harness (injectable interleavings), and the build coordinator's
+    cut → build-off-path → finalize-on-serving-thread protocol;
+  - async flush: results bit-identical to the ``sync`` baseline for every
+    index kind, across real worker pools AND seeded interleavings, with
+    ticket futures (result(timeout), worker-crash re-raise);
+  - async compaction: mutate-during-compaction linearizability — every
+    query observes exactly one (store, generation) pair, the post-cut
+    replay equals a from-scratch rebuild of the final table — plus the
+    stale-build guard and per-tenant drift loops on a shared pool.
+
+Run in CI with PYTHONFAULTHANDLER=1 under a hang watchdog: a deadlock here
+must fail loudly with thread tracebacks, not time out the workflow.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.async_ import (BuildCoordinator, FaultInjector, Future,
+                          PoolShutdown, SerialExecutor, StepExecutor,
+                          WorkerCrashed, WorkerPool)
+from repro.core.types import Constraints, IndexSpec, QueryPlan, Workload
+from repro.core.tuner import Mint
+from repro.data.vectors import make_database, make_queries
+from repro.index.registry import IndexStore
+from repro.ingest import CompactionPolicy, IngestConfig, IngestRuntime
+from repro.online import OnlineRuntime, RuntimeConfig, steady_trace
+from repro.online.scheduler import MicroBatcher
+from repro.online.trace import row_batch
+from repro.serve.engine import BatchEngine
+
+K = 8
+COLS = [("a", 24), ("b", 32)]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(400, COLS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl(db):
+    qs = make_queries(db, [(0,), (0, 1), (1,)], k=K, seed=7)
+    return Workload(queries=qs, probs=np.ones(len(qs)))
+
+
+@pytest.fixture(scope="module")
+def cons():
+    return Constraints(theta_recall=0.85, theta_storage=3)
+
+
+@pytest.fixture(scope="module")
+def mint(db):
+    return Mint(db, index_kind="ivf", seed=0, min_sample_rows=300)
+
+
+@pytest.fixture(scope="module")
+def tuned(mint, wl, cons):
+    return mint.tune(wl, cons)
+
+
+@pytest.fixture(scope="module")
+def mint_flat(db):
+    return Mint(db, index_kind="flat", seed=0, min_sample_rows=300)
+
+
+@pytest.fixture(scope="module")
+def tuned_flat(mint_flat, wl, cons):
+    return mint_flat.tune(wl, cons)
+
+
+# ---- executor substrate -----------------------------------------------------
+
+
+def test_future_lifecycle_and_timeout():
+    f = Future("t")
+    assert not f.done() and f.state == "pending"
+    with pytest.raises(TimeoutError):
+        f.result(timeout=0.01)
+    assert f._set_running() and not f._set_running()
+    f.set_result(41)
+    assert f.done() and f.result() == 41
+    assert f.exception() is None
+    assert not f.set_result(42)  # completion is single-shot
+    g = Future("g")
+    g.set_exception(ValueError("boom"))
+    with pytest.raises(ValueError):
+        g.result()
+    seen = []
+    g.add_done_callback(seen.append)  # already done: fires inline
+    assert seen == [g]
+
+
+def test_worker_pool_runs_tasks_and_shuts_down_idempotently():
+    with WorkerPool(workers=3, name="t") as pool:
+        futs = [pool.submit(lambda i=i: i * i, label=f"sq:{i}")
+                for i in range(20)]
+        assert [f.result(timeout=10) for f in futs] == [i * i for i in range(20)]
+        assert pool.join(timeout=10)
+    pool.shutdown()  # idempotent
+    with pytest.raises(PoolShutdown):
+        pool.submit(lambda: None)
+
+
+def test_worker_pool_task_error_is_isolated():
+    with WorkerPool(workers=2, name="t") as pool:
+        bad = pool.submit(lambda: 1 / 0, label="bad")
+        good = pool.submit(lambda: "ok", label="good")
+        with pytest.raises(ZeroDivisionError):
+            bad.result(timeout=10)
+        assert good.result(timeout=10) == "ok"
+
+
+def test_worker_crash_fails_future_and_respawns_worker():
+    inj = FaultInjector(crash_on=(2,))
+    pool = WorkerPool(workers=1, name="t", hooks=inj)
+    try:
+        assert pool.submit(lambda: 1, label="a").result(timeout=10) == 1
+        doomed = pool.submit(lambda: 2, label="b")
+        with pytest.raises(WorkerCrashed):
+            doomed.result(timeout=10)
+        # capacity survives: a replacement worker serves the next task
+        assert pool.submit(lambda: 3, label="c").result(timeout=10) == 3
+        assert pool.crashed_workers == 1
+    finally:
+        pool.shutdown()
+
+
+def test_step_executor_seeded_interleavings_are_reproducible():
+    def order_for(seed):
+        ex = StepExecutor(seed=seed)
+        for i in range(8):
+            ex.submit(lambda i=i: i, label=f"t{i}")
+        ex.run_all()
+        return list(ex.ran)
+
+    assert order_for(3) == order_for(3)          # deterministic per seed
+    orders = {tuple(order_for(s)) for s in range(6)}
+    assert len(orders) > 1                        # seeds permute the order
+    fifo = StepExecutor()                         # unseeded: FIFO
+    for i in range(4):
+        fifo.submit(lambda i=i: i, label=f"t{i}")
+    fifo.run_all()
+    assert fifo.ran == [f"t{i}" for i in range(4)]
+
+
+def test_step_executor_crash_and_shutdown_cancel():
+    ex = StepExecutor(seed=0)
+    f1 = ex.submit(lambda: 1, label="a")
+    f2 = ex.submit(lambda: 2, label="b")
+    ex.crash_next(index=0)
+    with pytest.raises(WorkerCrashed):
+        f1.result()
+    ex.shutdown(cancel_pending=True)
+    with pytest.raises(PoolShutdown):
+        f2.result()
+    with pytest.raises(PoolShutdown):
+        ex.submit(lambda: 3)
+
+
+def test_serial_executor_runs_inline():
+    ex = SerialExecutor()
+    assert ex.submit(lambda: 5, label="x").result() == 5
+    assert ex.order == ["x"]
+
+
+def test_build_coordinator_protocol():
+    ex = StepExecutor(seed=0)
+    coord = BuildCoordinator(ex)
+    finalized = []
+    b = coord.submit("k", lambda: 10,
+                     finalize=lambda res, now: finalized.append((res, now)) or res,
+                     label="build")
+    assert b is not None and coord.inflight("k")
+    assert coord.submit("k", lambda: 11, finalize=lambda r, n: r) is None
+    assert coord.poll(1.0) == []          # build not stepped yet
+    ex.run_all()
+    assert b.built and not finalized      # finalize waits for a poll
+    [done] = coord.poll(2.0)
+    assert done is b and b.finalized and finalized == [(10, 2.0)]
+    assert not coord.inflight()
+    # failures are recorded, finalize never runs for them
+    b2 = coord.submit("k", lambda: 1 / 0, finalize=lambda r, n: r, label="bad")
+    ex.run_all()
+    assert coord.poll() == [] and len(coord.failures) == 1
+    assert isinstance(coord.failures[0].error, ZeroDivisionError)
+    assert not b2.finalized
+
+
+# ---- async flush ------------------------------------------------------------
+
+
+def _batcher_run(engine, pairs, executor=None, stage=False, max_batch=4):
+    """Drive a MicroBatcher over explicit (query, plan) pairs; returns ids
+    in submit order (sync inline when executor is None)."""
+    def execute(tickets, staged=None):
+        return engine.search_batch([(t.query, t.plan) for t in tickets],
+                                   staged=staged)
+
+    stage_fn = None
+    if stage:
+        stage_fn = lambda tickets: engine.stage_batch(  # noqa: E731
+            [(t.query, t.plan) for t in tickets])
+    mb = MicroBatcher(execute, plan_for=None, max_batch=max_batch,
+                      executor=executor, stage=stage_fn)
+    tickets = [mb.submit(q, now=i * 1e-4, plan=p)
+               for i, (q, p) in enumerate(pairs)]
+    mb.drain(1.0)
+    return [np.asarray(t.result(timeout=30)) for t in tickets], mb
+
+
+def _kind_pairs(db, kind, n_rows, rng):
+    """Plans covering single-exact, rerank, and fallback groups for one
+    index kind (async-vs-sync equality holds at ANY depth: both sides run
+    the same engine over the same store)."""
+    qs = make_queries(db, [(0,), (0, 1), (1,), (0, 1)] * 3, k=K,
+                      seed=int(rng.integers(1000)))
+    pairs = []
+    for i, q in enumerate(qs):
+        q.qid = 10_000 + i
+        if i % 3 == 2:
+            plan = QueryPlan(q.qid, [], [], 1.0, 1.0)          # fallback
+        elif len(q.vid) > 1 and i % 3 == 1:
+            plan = QueryPlan(q.qid,
+                             [IndexSpec((c,), kind) for c in q.vid],
+                             [int(rng.integers(8, 40)) for _ in q.vid],
+                             1.0, 1.0)                          # rerank
+        else:
+            plan = QueryPlan(q.qid, [IndexSpec(q.vid, kind)],
+                             [int(rng.integers(8, 40))], 1.0, 1.0)
+        pairs.append((q, plan))
+    return pairs
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf", "hnsw", "diskann"])
+def test_async_flush_bit_identical_to_sync_per_kind(db, kind):
+    """ACCEPTANCE: async flush == sync flush, per index kind, on a real
+    worker pool AND under seeded StepExecutor interleavings (with staging
+    on the pool run, so the transfer-overlap path is covered too)."""
+    rng = np.random.default_rng(5)
+    store = IndexStore(db, seed=0)
+    engine = BatchEngine(db, store=store)
+    pairs = _kind_pairs(db, kind, db.n_rows, rng)
+    ref, _ = _batcher_run(engine, pairs)  # sync baseline
+    with WorkerPool(workers=2, name="flush") as pool:
+        got_pool, _ = _batcher_run(engine, pairs, executor=pool, stage=True)
+    for seed in (0, 1):
+        got_step, _ = _batcher_run(engine, pairs,
+                                   executor=StepExecutor(seed=seed))
+        for r, a, b in zip(ref, got_pool, got_step):
+            np.testing.assert_array_equal(r, a)
+            np.testing.assert_array_equal(r, b)
+
+
+def test_runtime_async_flush_matches_sync(db, mint, wl, cons, tuned):
+    trace = steady_trace(db, wl, n=48, qps=1000.0, seed=3)
+    rt_sync = OnlineRuntime(db, mint, wl, cons, result=tuned,
+                            config=RuntimeConfig(max_batch=8, cooldown_s=1e9,
+                                                 drift_threshold=2.0))
+    ref = rt_sync.run_trace(trace)
+    rt_async = OnlineRuntime(db, mint, wl, cons, result=tuned,
+                             config=RuntimeConfig(max_batch=8, cooldown_s=1e9,
+                                                  drift_threshold=2.0,
+                                                  async_flush=True, workers=2))
+    got = rt_async.run_trace(trace)
+    rt_async.close()
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a.ids),
+                                      np.asarray(b.result(timeout=30)))
+        assert b.batch_size == a.batch_size
+
+
+def test_ticket_future_timeout_then_result(db):
+    engine = BatchEngine(db, store=None)
+    ex = StepExecutor(seed=0)
+    q = make_queries(db, [(0, 1)], k=K, seed=9)[0]
+    plan = QueryPlan(q.qid, [IndexSpec((0, 1), "flat")], [16], 1.0, 1.0)
+
+    def execute(tickets, staged=None):
+        return engine.search_batch([(t.query, t.plan) for t in tickets])
+
+    mb = MicroBatcher(execute, plan_for=None, max_batch=1, executor=ex)
+    tk = mb.submit(q, now=0.0, plan=plan)       # size-triggered flush queued
+    assert tk.flushed and not tk.done
+    with pytest.raises(TimeoutError):
+        tk.result(timeout=0.01)
+    ex.run_all()
+    ids = tk.result(timeout=1)
+    [ref] = engine.search_batch([(q, plan)])
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref))
+
+
+def test_worker_crash_makes_ticket_future_raise(db):
+    engine = BatchEngine(db, store=None)
+    ex = StepExecutor(seed=0)
+
+    def execute(tickets, staged=None):
+        return engine.search_batch([(t.query, t.plan) for t in tickets])
+
+    mb = MicroBatcher(execute, plan_for=None, max_batch=1, executor=ex)
+    qs = make_queries(db, [(0,), (0,)], k=K, seed=11)
+    qs[1].qid = qs[0].qid + 1
+    plans = [QueryPlan(q.qid, [IndexSpec((0,), "flat")], [16], 1.0, 1.0)
+             for q in qs]
+    t1 = mb.submit(qs[0], now=0.0, plan=plans[0])
+    t2 = mb.submit(qs[1], now=0.0, plan=plans[1])
+    ex.crash_next(index=0)                      # t1's worker dies mid-flush
+    ex.run_all()
+    with pytest.raises(WorkerCrashed):
+        t1.result(timeout=1)
+    np.testing.assert_array_equal(
+        np.asarray(t2.result(timeout=1)),
+        np.asarray(engine.search_batch([(qs[1], plans[1])])[0]))
+    done = mb.drain(1.0)                        # failed job still harvests
+    assert t1 in done and not t1.done and t2.done
+
+
+def test_pool_shutdown_mid_flush_does_not_deadlock(db):
+    """A flush is EXECUTING when the pool shuts down with cancel_pending:
+    the running batch completes, queued batches fail with PoolShutdown,
+    and every join returns within the watchdog budget."""
+    engine = BatchEngine(db, store=None)
+    gate = threading.Event()
+    started = threading.Event()
+
+    def execute(tickets, staged=None):
+        started.set()
+        assert gate.wait(timeout=30)
+        return engine.search_batch([(t.query, t.plan) for t in tickets])
+
+    pool = WorkerPool(workers=1, name="t")
+    mb = MicroBatcher(execute, plan_for=None, max_batch=1, executor=pool)
+    qs = make_queries(db, [(0,), (0,), (0,)], k=K, seed=13)
+    tks = []
+    for i, q in enumerate(qs):
+        q.qid = 100 + i
+        plan = QueryPlan(q.qid, [IndexSpec((0,), "flat")], [16], 1.0, 1.0)
+        tks.append(mb.submit(q, now=0.0, plan=plan))
+    assert started.wait(timeout=10)             # first batch is running
+    pool.shutdown(wait=False, cancel_pending=True)
+    gate.set()                                  # let the running batch finish
+    assert pool.join(timeout=30), "pool did not quiesce — deadlock"
+    assert tks[0].result(timeout=10) is not None
+    for tk in tks[1:]:
+        with pytest.raises(PoolShutdown):
+            tk.result(timeout=10)
+    mb.sync_inflight()                          # harvests without hanging
+
+
+# ---- async compaction -------------------------------------------------------
+
+
+def _ingest_rt(db, mint, wl, cons, tuned, executor, async_flush=False,
+               async_compaction=True):
+    return IngestRuntime(
+        db, mint, wl, cons, result=tuned,
+        config=RuntimeConfig(max_batch=4, cooldown_s=1e9, drift_threshold=2.0,
+                             async_flush=async_flush),
+        ingest=IngestConfig(
+            policy=CompactionPolicy(max_delta_fraction=None,
+                                    max_dead_fraction=None),
+            min_mutated_rows=10**9, async_compaction=async_compaction),
+        executor=executor)
+
+
+def test_mutate_during_compaction_linearizability(db, mint, wl, cons, tuned):
+    """ACCEPTANCE: while a compaction builds off-path, mutations and
+    queries keep landing; every query observes exactly one (store,
+    generation) pair — the OLD one until the atomic rebase, with results
+    equal to the live-table oracle — and the post-cut replay makes the
+    rebased table equal a from-scratch rebuild of the final state."""
+    step = StepExecutor(seed=3)
+    rt = _ingest_rt(db, mint, wl, cons, tuned, step)
+    rng = np.random.default_rng(2)
+    rt.insert(row_batch(db, rng, 40))
+    rt.delete(rng.choice(rt.table.live_ids(), 30, replace=False))
+    gen0, store0 = rt.generation, rt.store
+    assert rt.compact_async(reason="test", now=1.0) is not None
+    assert rt.builds.inflight("compact")
+    assert rt.compact_async(reason="dup", now=1.0) is None  # one at a time
+
+    # mid-build: mutations land, queries serve the LIVE table on the old
+    # (store, generation) pair. Exact (single flat index) plans make the
+    # live-table oracle a bit-identity, independent of tuned recall.
+    rt.insert(row_batch(db, rng, 12))
+    rt.delete(rng.choice(rt.table.live_ids(), 9, replace=False))
+    q = make_queries(db, [(0, 1)], k=K, seed=9)[0]
+    q.qid = 777
+    exact = QueryPlan(q.qid, [IndexSpec((0, 1), "flat")], [K], 1.0, 1.0)
+    tk = rt.batcher.submit(q, 1.5, plan=exact)
+    rt.drain(1.6)
+    np.testing.assert_array_equal(np.asarray(tk.ids), rt.view.ground_truth(q))
+    assert rt.generation == gen0 and rt.store is store0
+
+    ref_db, ref_ids = rt.table.materialize()    # final live content
+    step.run_all()                              # build completes off-path
+    assert rt.generation == gen0                # not yet finalized
+    rt.tick(2.0)                                # finalize at tick
+    assert rt.generation == gen0 + 1
+    ev = rt.compaction_events[-1]
+    assert ev.mode == "async" and ev.replayed == 2
+    assert ev.build_seconds > 0
+
+    # replay-rebase == from-scratch rebuild of the final table
+    got_db, got_ids = rt.table.materialize()
+    np.testing.assert_array_equal(got_ids, ref_ids)
+    for c in range(len(COLS)):
+        np.testing.assert_array_equal(got_db.columns[c], ref_db.columns[c])
+    q2 = make_queries(db, [(0, 1)], k=K, seed=11)[0]
+    q2.qid = 778
+    exact2 = QueryPlan(q2.qid, [IndexSpec((0, 1), "flat")], [K], 1.0, 1.0)
+    tk2 = rt.batcher.submit(q2, 3.0, plan=exact2)
+    rt.drain(3.1)
+    reng = BatchEngine(ref_db, store=IndexStore(ref_db, seed=0))
+    [ref] = reng.search_batch([(q2, exact2)])
+    np.testing.assert_array_equal(np.asarray(tk2.ids),
+                                  ref_ids[np.asarray(ref)])
+
+
+def _churn_schedule(db, rt):
+    """Fixed mutate/query/compact schedule; queries carry exact
+    single-flat-index plans so each result must equal the live table's
+    top-k AT ITS FLUSH — captured by wrapping the execute callback (on the
+    flush path itself, so it sees exactly the table version the batch ran
+    against, wherever the interleaving put it)."""
+    gts = {}
+    orig = rt.batcher.execute
+
+    def execute(tickets, staged=None):
+        for t in tickets:
+            gts[t.query.qid] = rt.view.ground_truth(t.query)
+        return orig(tickets, staged)
+
+    rt.batcher.execute = execute
+    rng = np.random.default_rng(21)
+    out = []
+    rt.insert(row_batch(db, rng, 30))
+    qs = make_queries(db, [(0,), (0, 1), (1,)] * 4, k=K, seed=17)
+    for i, q in enumerate(qs):
+        q.qid = 5000 + i
+        plan = QueryPlan(q.qid, [IndexSpec(q.vid, "flat")], [K], 1.0, 1.0)
+        out.append(rt.batcher.submit(q, i * 1e-3, plan=plan))
+        if i == 3:
+            rt.delete(rng.choice(rt.table.live_ids(), 20, replace=False))
+        if i == 5:
+            if rt.ingest.async_compaction:
+                rt.compact_async(reason="mid", now=i * 1e-3)
+            else:
+                rt.compact(reason="mid", now=i * 1e-3)
+        if i == 8:
+            rt.insert(row_batch(db, rng, 15))
+        rt.tick(i * 1e-3)
+    rt.drain(1.0)
+    rt.wait_maintenance(now=1.0)
+    return out, gts
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_churn_under_seeded_interleavings_matches_serial(db, mint_flat, wl,
+                                                         cons, tuned_flat,
+                                                         seed):
+    """ACCEPTANCE: async flush + async compaction under seeded worker
+    interleavings stay linearizable — every flushed batch ran against ONE
+    consistent table version (each result equals the flush-time oracle),
+    runs are deterministic per seed, and the final table CONVERGES to the
+    serial schedule's state (same materialized rows, same final top-k).
+    Per-flush timing legitimately shifts with the interleaving; torn
+    reads, lost mutations, or double applies would break these checks."""
+    rt_ref = _ingest_rt(db, mint_flat, wl, cons, tuned_flat, None,
+                        async_compaction=False)
+    ref, ref_gts = _churn_schedule(db, rt_ref)
+    ref_db, ref_ids = rt_ref.table.materialize()
+    for t in ref:  # the serial baseline itself honors the flush-time oracle
+        np.testing.assert_array_equal(np.asarray(t.ids),
+                                      ref_gts[t.query.qid])
+
+    def run_async(s):
+        rt = _ingest_rt(db, mint_flat, wl, cons, tuned_flat,
+                        StepExecutor(seed=s), async_flush=True)
+        out, gts = _churn_schedule(db, rt)
+        return rt, out, gts
+
+    rt, got, gts = run_async(seed)
+    for t in got:
+        ids = np.asarray(t.result(timeout=30))
+        np.testing.assert_array_equal(ids, gts[t.query.qid])
+    got_db, got_ids = rt.table.materialize()
+    np.testing.assert_array_equal(got_ids, ref_ids)   # convergence
+    for c in range(len(COLS)):
+        np.testing.assert_array_equal(got_db.columns[c], ref_db.columns[c])
+    assert rt.compaction_events and rt.compaction_events[-1].mode == "async"
+    # determinism: the same seed reproduces the identical run
+    rt2, got2, _ = run_async(seed)
+    for a, b in zip(got, got2):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        assert a.batch_size == b.batch_size and a.t_done == b.t_done
+
+
+def test_stale_async_build_is_dropped(db, mint, wl, cons, tuned):
+    """A sync fold that lands while an async build is in flight truncates
+    the log past the async cut; the late build must be dropped, not
+    installed backward."""
+    step = StepExecutor(seed=0)
+    rt = _ingest_rt(db, mint, wl, cons, tuned, step)
+    rng = np.random.default_rng(4)
+    rt.insert(row_batch(db, rng, 25))
+    rt.compact_async(reason="slow", now=1.0)
+    rt.insert(row_batch(db, rng, 10))
+    rt.compact(reason="fast", now=1.1)          # in-line fold wins the race
+    gen_after_sync = rt.generation
+    ref_db, ref_ids = rt.table.materialize()
+    step.run_all()
+    rt.tick(2.0)                                # stale async build arrives
+    assert rt.stale_async_builds == 1
+    assert rt.generation == gen_after_sync      # nothing re-installed
+    got_db, got_ids = rt.table.materialize()
+    np.testing.assert_array_equal(got_ids, ref_ids)
+    np.testing.assert_array_equal(got_db.columns[0], ref_db.columns[0])
+
+
+def test_async_compaction_auto_fires_from_maintain(db, mint, wl, cons, tuned):
+    step = StepExecutor(seed=1)
+    rt = IngestRuntime(
+        db, mint, wl, cons, result=tuned,
+        config=RuntimeConfig(max_batch=4, cooldown_s=1e9, drift_threshold=2.0),
+        ingest=IngestConfig(
+            policy=CompactionPolicy(max_delta_fraction=0.05,
+                                    max_dead_fraction=None),
+            min_mutated_rows=1, async_compaction=True),
+        executor=step)
+    rng = np.random.default_rng(6)
+    rt.insert(row_batch(db, rng, 60))           # over the delta trigger
+    rt.tick(0.1)                                # policy fires -> async cut
+    assert rt.builds.inflight("compact")
+    rt.insert(row_batch(db, rng, 5))            # mid-build mutation
+    step.run_all()
+    rt.tick(0.2)                                # finalize
+    assert len(rt.compaction_events) == 1
+    ev = rt.compaction_events[0]
+    assert ev.mode == "async" and ev.replayed == 1
+    assert rt.table.n_delta == 5                # replayed rows live in delta
+
+
+# ---- per-tenant drift loops -------------------------------------------------
+
+
+def test_per_tenant_drift_loops_on_shared_pool():
+    from repro.tenancy import MultiTenantRuntime, Tenant
+
+    cons = Constraints(theta_recall=0.85, theta_storage=2)
+    specs, dbs = [], {}
+    for i, tid in enumerate(("A", "B")):
+        tdb = make_database(300, COLS, seed=i)
+        twl = Workload(queries=make_queries(tdb, [(0,), (0, 1)], k=K, seed=i),
+                       probs=np.ones(2))
+        dbs[tid] = tdb
+        specs.append(Tenant(tid, tdb, Mint(tdb, index_kind="ivf", seed=i,
+                                           min_sample_rows=200), twl, cons))
+    step = StepExecutor(seed=5)
+    rt = MultiTenantRuntime(
+        specs, budget_bytes=256 << 20,
+        config=RuntimeConfig(max_batch=4, window=32, min_window=8,
+                             drift_threshold=0.3, cooldown_s=0.0),
+        executor=step)
+    rt.enable_drift_loop("A")
+    rt.enable_drift_loop("B")
+    with pytest.raises(ValueError):
+        rt.enable_drift_loop("A")
+    genA0, genB0 = rt.generation_of("A"), rt.generation_of("B")
+
+    qa = make_queries(dbs["A"], [(1,)] * 24, k=K, seed=33)           # drifted
+    qb = make_queries(dbs["B"], [(0,), (0, 1)] * 12, k=K, seed=34)   # on-mix
+    for i, (a, b) in enumerate(zip(qa, qb)):
+        a.qid, b.qid = 1000 + i, 2000 + i
+        ta = rt.submit("A", a, i * 1e-3)
+        rt.submit("B", b, i * 1e-3)
+        rt.tick(i * 1e-3)
+    # A's tune is queued on the pool; flushes keep landing meanwhile
+    assert any(lbl.startswith("retune") for lbl in step.pending())
+    done = rt.drain(1.0)
+    assert all(t.done for t in done) and ta.done
+    step.run_all()
+    rt.tick(2.0)                                 # finalize A's swap here
+    rt.join_drift_loops(now=2.0)
+    assert len(rt.retune_events("A")) >= 1
+    assert rt.generation_of("A") > genA0
+    # B stayed on its mix: no retune, generation untouched by A's loop
+    assert rt.retune_events("B") == []
+    assert rt.generation_of("B") == genB0
+    rt.close()
+
+
+def test_online_runtime_pool_retune_mode(db, mint, wl, cons, tuned):
+    """Single-tenant pool mode: drift fires, tune+build run on the
+    executor, swap finalizes on the serving thread at a later tick."""
+    step = StepExecutor(seed=2)
+    night = make_queries(db, [(1,)] * 20, k=K, seed=44)
+    rt = OnlineRuntime(db, mint, wl, cons, result=tuned,
+                       config=RuntimeConfig(max_batch=4, window=32,
+                                            min_window=8, cooldown_s=0.0,
+                                            drift_threshold=0.3,
+                                            retune_mode="pool"),
+                       executor=step)
+    gen0 = rt.generation
+    for i, q in enumerate(night):
+        q.qid = 3000 + i
+        rt.submit(q, i * 1e-3)
+        rt.tick(i * 1e-3)
+    assert rt.retuner.inflight
+    assert rt.generation == gen0        # swap has not landed yet
+    rt.drain(1.0)
+    step.run_all()
+    rt.tick(2.0)
+    assert len(rt.retune_events) == 1 and rt.generation == gen0 + 1
+    rt.close()
+
+
+def test_runtime_close_shuts_down_owned_pool(db, mint, wl, cons, tuned):
+    rt = OnlineRuntime(db, mint, wl, cons, result=tuned,
+                       config=RuntimeConfig(max_batch=4, cooldown_s=1e9,
+                                            drift_threshold=2.0,
+                                            async_flush=True, workers=1))
+    q = make_queries(db, [(0,)], k=K, seed=50)[0]
+    rt.submit(q, 0.0)
+    t0 = time.time()
+    rt.close()
+    assert time.time() - t0 < 60        # drain + shutdown, no deadlock
+    with pytest.raises(PoolShutdown):
+        rt.executor.submit(lambda: None)

@@ -99,6 +99,84 @@ def test_materialize_orders_by_stable_id_and_rebase(db):
     assert new_ids.min() > int(mids.max())
 
 
+def test_log_records_carry_vectors_roundtrip(db):
+    """Satellite fix (DESIGN.md §10): every log record carries the vectors
+    its batch moved — insert/upsert the new rows, delete the tombstoned
+    rows' prior contents (+ the non-stale id subset) — so the log between
+    two compaction cuts is a complete redo/undo record."""
+    t = MutableTable(db)
+    rng = np.random.default_rng(41)
+    new = row_batch(db, rng, 6)
+    _, ins_ids = t.apply(InsertBatch(new))
+    rec = t.log.records[-1]
+    assert rec.kind == "insert" and rec.vectors is not None
+    for c in range(db.n_cols):
+        np.testing.assert_array_equal(rec.vectors[c], new[c])
+
+    # delete: applied_ids = non-stale subset, vectors = prior contents
+    doomed = np.array([0, ins_ids[0], 999_999])   # base, delta, unknown
+    t.apply(DeleteBatch(doomed))
+    rec = t.log.records[-1]
+    assert rec.kind == "delete"
+    np.testing.assert_array_equal(rec.applied_ids, [0, ins_ids[0]])
+    np.testing.assert_array_equal(rec.vectors[0][0], db.columns[0][0])
+    np.testing.assert_array_equal(rec.vectors[0][1], new[0][0])
+
+    up = row_batch(db, rng, 2)
+    t.apply(UpsertBatch(np.array([3, 7]), up))
+    rec = t.log.records[-1]
+    assert rec.kind == "upsert"
+    for c in range(db.n_cols):
+        np.testing.assert_array_equal(rec.vectors[c], up[c])
+
+    # fully-stale delete: applied empty, no vectors
+    t.apply(DeleteBatch(np.array([0])))
+    rec = t.log.records[-1]
+    assert rec.applied == 0 and rec.vectors is None
+    assert rec.applied_ids.shape == (0,)
+
+
+def test_rebase_replay_equals_from_scratch(db):
+    """ACCEPTANCE (async compaction): cut a snapshot, keep mutating, then
+    rebase(snapshot, replay=post-cut records) — the result must equal a
+    from-scratch materialization of the final table (same stable ids,
+    same rows), and fresh ids keep ascending."""
+    rng = np.random.default_rng(43)
+    t = _churned_table(db, seed=42, n_insert=25, n_delete=30, n_upsert=4)
+    snap_db, snap_ids, cut = t.snapshot()
+    # post-cut churn: insert, delete (some stale), upsert, delete-of-insert
+    _, ids_new = t.apply(InsertBatch(row_batch(db, rng, 10)))
+    t.apply(DeleteBatch(np.concatenate([ids_new[:3], np.array([888_888])])))
+    up_targets = rng.choice(t.live_ids(), size=5, replace=False)
+    t.apply(UpsertBatch(np.sort(up_targets), row_batch(db, rng, 5)))
+    t.apply(DeleteBatch(rng.choice(t.live_ids(), size=7, replace=False)))
+    ref_db, ref_ids = t.materialize()            # truth: final live table
+    next_id_before = t.next_id
+
+    replay = t.log.since(cut)
+    assert len(replay) == 4
+    t.rebase(snap_db, snap_ids, cut, replay=replay)
+    got_db, got_ids = t.materialize()
+    np.testing.assert_array_equal(got_ids, ref_ids)
+    for c in range(db.n_cols):
+        np.testing.assert_array_equal(got_db.columns[c], ref_db.columns[c])
+    assert len(t.log) == 4                       # post-cut records survive
+    assert t.log.truncated_upto == cut
+    assert t.next_id == next_id_before
+    _, fresh = t.apply(InsertBatch(row_batch(db, rng, 1)))
+    assert fresh[0] == next_id_before            # ids keep ascending
+
+
+def test_replay_without_vectors_raises(db):
+    t = MutableTable(db)
+    t.apply(InsertBatch(row_batch(db, np.random.default_rng(44), 3)))
+    rec = t.log.records[-1]
+    rec.vectors = None                           # e.g. a pre-PR5 log
+    mdb, mids = MutableTable(db).materialize()
+    with pytest.raises(ValueError, match="cannot replay"):
+        t.rebase(mdb, mids, 0, replay=[rec])
+
+
 def test_incremental_live_means_match_rescan(db):
     t = _churned_table(db, seed=3, n_upsert=8)
     mdb, _ = t.materialize()

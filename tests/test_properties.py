@@ -71,3 +71,136 @@ def test_reverse_edges_are_reverses(n, k, cap):
         for u in out[v, adj.shape[1]:]:
             if u >= 0:
                 assert v in adj[u].tolist()
+
+
+# ---- async pipeline convergence (DESIGN.md §10) -----------------------------
+
+_ASYNC_STATE: dict = {}
+
+
+def _async_fixture():
+    """Module-lazy shared state for the interleaving property: one small
+    database + one tuned result, reused across examples (the property
+    varies the SCHEDULE and the INTERLEAVING, not the deployment)."""
+    if not _ASYNC_STATE:
+        from repro.core.tuner import Mint
+        from repro.core.types import Constraints, Workload
+        from repro.data.vectors import make_database, make_queries
+
+        db = make_database(120, [("a", 12), ("b", 16)], seed=5)
+        qs = make_queries(db, [(0,), (0, 1), (1,)], k=6, seed=6)
+        wl = Workload(queries=qs, probs=np.ones(len(qs)))
+        cons = Constraints(theta_recall=0.85, theta_storage=2)
+        mint = Mint(db, index_kind="flat", seed=0, min_sample_rows=60)
+        _ASYNC_STATE.update(db=db, wl=wl, cons=cons, mint=mint,
+                            result=mint.tune(wl, cons))
+    return _ASYNC_STATE
+
+
+def _async_runtime(executor, async_mode):
+    from repro.ingest import CompactionPolicy, IngestConfig, IngestRuntime
+    from repro.online.runtime import RuntimeConfig
+
+    s = _async_fixture()
+    return IngestRuntime(
+        s["db"], s["mint"], s["wl"], s["cons"], result=s["result"],
+        config=RuntimeConfig(max_batch=3, cooldown_s=1e9, drift_threshold=2.0,
+                             async_flush=async_mode),
+        ingest=IngestConfig(
+            policy=CompactionPolicy(max_delta_fraction=None,
+                                    max_dead_fraction=None),
+            min_mutated_rows=10**9, async_compaction=async_mode),
+        executor=executor)
+
+
+def _run_schedule(rt, ops, rng_seed, async_mode):
+    """Apply one op schedule; queries use exact single-flat-index plans so
+    every result is the exact top-k of whatever table version its batch
+    flushed against."""
+    from repro.core.types import IndexSpec, QueryPlan
+    from repro.data.vectors import make_queries
+    from repro.online.trace import row_batch
+
+    s = _async_fixture()
+    db = s["db"]
+    rng = np.random.default_rng(rng_seed)
+    vids = [(0,), (0, 1), (1,)]
+    tickets = []
+    for i, op in enumerate(ops):
+        t = i * 1e-3
+        if op == "insert":
+            rt.insert(row_batch(db, rng, int(rng.integers(2, 7))))
+        elif op == "delete":
+            live = rt.table.live_ids()
+            n = min(int(rng.integers(1, 5)), live.shape[0] - 10)
+            if n > 0:
+                rt.delete(rng.choice(live, size=n, replace=False))
+        elif op == "upsert":
+            live = rt.table.live_ids()
+            n = min(3, live.shape[0])
+            ids = np.sort(rng.choice(live, size=n, replace=False))
+            rt.upsert(ids, row_batch(db, rng, n))
+        elif op == "query":
+            q = make_queries(db, [vids[i % len(vids)]], k=6,
+                             seed=100 + i)[0]
+            q.qid = 40_000 + i
+            plan = QueryPlan(q.qid, [IndexSpec(q.vid, "flat")], [6], 1.0, 1.0)
+            tickets.append(rt.batcher.submit(q, t, plan=plan))
+        elif op == "flush":
+            rt.drain(t)
+        elif op == "compact":
+            if async_mode:
+                rt.compact_async(reason="prop", now=t)
+            else:
+                rt.compact(reason="prop", now=t)
+        elif op == "retune":
+            # the control-path contender: a generation swap racing the
+            # flush/compaction machinery (drain + template re-seed + prune)
+            rt.swap(rt.result, s["wl"], now=t)
+        rt.tick(t)
+    rt.drain(1.0)
+    rt.wait_maintenance(now=1.0)
+    return tickets
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.sampled_from(["insert", "delete", "upsert", "query",
+                                 "flush", "compact", "retune"]),
+                min_size=4, max_size=18),
+       st.integers(0, 2**16), st.integers(0, 2**16))
+def test_async_interleavings_converge_to_serial(ops, rng_seed, exec_seed):
+    """Random mutate/flush/compact/retune interleavings on a small table,
+    executed async under a seeded StepExecutor, CONVERGE to the serial
+    schedule: identical final materialized table and identical final
+    top-k, with every mid-schedule query equal to the exact top-k of one
+    consistent table version (its own flush)."""
+    from repro.async_ import StepExecutor
+    from repro.core.types import IndexSpec, QueryPlan
+    from repro.data.vectors import make_queries
+
+    s = _async_fixture()
+    ref_rt = _async_runtime(None, async_mode=False)
+    _run_schedule(ref_rt, ops, rng_seed, async_mode=False)
+    ref_db, ref_ids = ref_rt.table.materialize()
+
+    rt = _async_runtime(StepExecutor(seed=exec_seed), async_mode=True)
+    tickets = _run_schedule(rt, ops, rng_seed, async_mode=True)
+    got_db, got_ids = rt.table.materialize()
+
+    np.testing.assert_array_equal(got_ids, ref_ids)
+    for c in range(got_db.n_cols):
+        np.testing.assert_array_equal(got_db.columns[c], ref_db.columns[c])
+    for tk in tickets:
+        assert tk.wait(timeout=30) and tk.ids is not None
+
+    # final top-k over the converged table matches the serial runtime's
+    probes = make_queries(s["db"], [(0,), (0, 1), (1,)], k=6, seed=909)
+    for j, q in enumerate(probes):
+        q.qid = 90_000 + j
+        plan = QueryPlan(q.qid, [IndexSpec(q.vid, "flat")], [6], 1.0, 1.0)
+        a = ref_rt.batcher.submit(q, 2.0, plan=plan)
+        b = rt.batcher.submit(q, 2.0, plan=plan)
+        ref_rt.drain(2.1)
+        rt.drain(2.1)
+        np.testing.assert_array_equal(np.asarray(a.ids),
+                                      np.asarray(b.result(timeout=30)))
