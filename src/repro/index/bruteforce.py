@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index.base import SearchResult, VectorIndex
+from repro.kernels.common import default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -23,14 +24,31 @@ def _topk_scores(data: jnp.ndarray, qvecs: jnp.ndarray, k: int):
 
 
 def batch_exact_topk(data: np.ndarray, qvecs: np.ndarray, k: int,
-                     block_rows: int = 8192) -> tuple[np.ndarray, np.ndarray]:
+                     block_rows: int = 8192,
+                     use_kernel: bool | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
     """Exact top-k for a batch of queries over ``data`` (N, d).
 
     Returns (ids (Q, k), scores (Q, k)). Blocked over N with a running
     tournament merge so memory stays bounded.
+
+    On an actual TPU backend (``use_kernel`` defaults to running on
+    non-interpret backends) the whole scan is instead ONE
+    ``streaming_fused_scan`` dispatch — distance + online top-k with no
+    materialized score matrix, so N is not capped by the score block. The
+    blocked XLA formulation stays the CPU/interpret default (interpret-mode
+    Pallas executes its grid in Python).
     """
     data = np.asarray(data, dtype=np.float32)
     qvecs = np.atleast_2d(np.asarray(qvecs, dtype=np.float32))
+    if use_kernel is None:
+        use_kernel = not default_interpret()
+    if use_kernel:
+        from repro.kernels.streaming.ops import streaming_fused_scan
+        vals, idx = streaming_fused_scan(
+            jnp.asarray(qvecs), jnp.asarray(data),
+            k=min(k, data.shape[0]))
+        return np.asarray(idx, dtype=np.int64), np.asarray(vals)
     n = data.shape[0]
     k = min(k, n)
     best_scores = None

@@ -14,6 +14,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index.base import SearchResult, VectorIndex
+from repro.kernels.common import default_interpret
+
+
+def _scan_gathered(sub: np.ndarray, qvec: np.ndarray, ek: int,
+                   use_kernel: bool | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Score a gathered probe-union (m, d) against one query and return the
+    local (positions, scores) of the ek best, best first. On a real TPU
+    backend this is ONE ``streaming_fused_scan`` dispatch (distance +
+    online top-k, no (1, m) score vector round-tripped through host numpy);
+    on CPU/interpret the numpy argpartition path is kept — it is faster
+    than a Python-interpreted Pallas grid and bit-stable for the tests."""
+    if use_kernel is None:
+        use_kernel = not default_interpret()
+    ek = min(ek, sub.shape[0])
+    if use_kernel:
+        from repro.kernels.streaming.ops import streaming_fused_scan
+        vals, idx = streaming_fused_scan(
+            jnp.asarray(qvec[None, :]), jnp.asarray(sub), k=ek)
+        return np.asarray(idx[0], dtype=np.int64), np.asarray(vals[0])
+    scores = sub @ qvec
+    part = np.argpartition(-scores, ek - 1)[:ek]
+    order = np.argsort(-scores[part], kind="stable")
+    sel = part[order]
+    return sel.astype(np.int64), scores[sel]
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters",))
@@ -70,13 +95,9 @@ class IVFFlatIndex(VectorIndex):
         ]) if nprobe else np.empty(0, dtype=np.int64)
         if rows.shape[0] == 0:
             return SearchResult(np.empty(0, np.int64), np.empty(0, np.float32), num_dist)
-        scores = self.data[rows] @ qvec
         num_dist += int(rows.shape[0])
-        ek = min(ek, rows.shape[0])
-        part = np.argpartition(-scores, ek - 1)[:ek]
-        order = np.argsort(-scores[part], kind="stable")
-        sel = part[order]
-        return SearchResult(ids=rows[sel], scores=scores[sel], num_dist=num_dist)
+        sel, scores = _scan_gathered(self.data[rows], qvec, ek)
+        return SearchResult(ids=rows[sel], scores=scores, num_dist=num_dist)
 
     def storage_bytes(self, edge_bytes: int = 4) -> int:
         # centroid table + inverted-list row ids

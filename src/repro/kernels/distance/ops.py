@@ -1,7 +1,13 @@
-"""Jitted public ops for the distance kernel: fused scan = scores + top-k."""
-from __future__ import annotations
+"""Jitted public ops for the two-pass fused scan: scores + top-k.
 
-import functools
+This is the REFERENCE path: it materializes the full (B, N) score matrix
+in HBM between the distance and top-k kernels. The serving default is the
+single-launch ``kernels/streaming`` kernel (same results, no score
+matrix); ``BatchEngine(streaming=False)`` or ``REPRO_TWOPASS_SCAN=1``
+falls back here, and the parity tests hold the streaming kernel
+bit-identical to this composition.
+"""
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -10,15 +16,19 @@ from repro.kernels.distance.kernel import batched_scores
 from repro.kernels.topk.kernel import NEG_INF, topk_scores
 
 
-@functools.partial(jax.jit, static_argnames=("valid_n",))
-def _mask_pad_rows(scores: jnp.ndarray, valid_n: int) -> jnp.ndarray:
-    pad = jnp.arange(scores.shape[1]) >= valid_n
-    return jnp.where(pad[None, :], NEG_INF, scores)
-
-
 @jax.jit
-def _mask_dead_rows(scores: jnp.ndarray, dead: jnp.ndarray) -> jnp.ndarray:
-    return jnp.where(dead[None, :], NEG_INF, scores)
+def _mask_rows(scores: jnp.ndarray, valid_n, dead) -> jnp.ndarray:
+    """ONE fused elementwise pass over the score matrix: rows at or past
+    ``valid_n`` (padding) and tombstoned rows both go to NEG_INF in a
+    single ``jnp.where``. ``valid_n`` is a TRACED scalar — every live-row
+    count shares one compiled program (the old static-argnum version
+    recompiled per table size and burned an extra full (B, N) HBM
+    read/write per mask). ``dead`` is None (structural — compiles a
+    no-tombstone variant) or an (N,) bool bitmap."""
+    bad = jnp.arange(scores.shape[1]) >= valid_n
+    if dead is not None:
+        bad = bad | dead
+    return jnp.where(bad[None, :], NEG_INF, scores)
 
 
 def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
@@ -42,11 +52,12 @@ def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
     still scanned (cost accounting is unchanged) — reclaiming the scan work
     itself is the compactor's job, not the mask's."""
     scores = batched_scores(q, db, metric=metric, interpret=interpret)
-    if valid_n is not None and valid_n < db.shape[0]:
-        scores = _mask_pad_rows(scores, int(valid_n))
+    has_pad = valid_n is not None and valid_n < db.shape[0]
+    if has_pad:
         k = min(k, int(valid_n))
-    if dead_mask is not None:
-        scores = _mask_dead_rows(scores, dead_mask)
+    if has_pad or dead_mask is not None:
+        vn = db.shape[0] if valid_n is None else valid_n
+        scores = _mask_rows(scores, vn, dead_mask)
     return topk_scores(scores, k, interpret=interpret)
 
 

@@ -1,0 +1,5 @@
+"""Streaming fused scan: distance + online top-k in ONE Pallas kernel."""
+from repro.kernels.streaming.ops import streaming_fused_scan
+from repro.kernels.streaming.ref import streaming_fused_scan_ref
+
+__all__ = ["streaming_fused_scan", "streaming_fused_scan_ref"]

@@ -1,0 +1,53 @@
+"""Two-pass reference oracle for the streaming fused scan.
+
+Materializes the full score matrix with the ORIGINAL two-pass kernels
+(``kernels/distance`` + ``kernels/topk``), applies the pad/tombstone masks
+as elementwise passes, and reduces with the blockwise top-k kernel — the
+exact computation the streaming kernel replaces. Score values are computed
+with the same per-tile f32 accumulation (pass the same ``bk``), so for
+distinct scores the streaming kernel must match this oracle bit-for-bit.
+Ids use the same combined-physical convention (delta row r -> padded base
+rows + r)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to
+from repro.kernels.distance.kernel import batched_scores
+from repro.kernels.topk.kernel import NEG_INF, topk_scores
+
+
+def _masked_scores(q, db, metric, valid_n, dead_mask, bk, interpret):
+    scores = batched_scores(q, db, metric=metric, bk=bk, interpret=interpret)
+    n = db.shape[0]
+    bad = jnp.arange(n) >= (n if valid_n is None else valid_n)
+    if dead_mask is not None:
+        bad = bad | pad_to(dead_mask.astype(bool), 0, n)[:n]
+    return jnp.where(bad[None, :], NEG_INF, scores)
+
+
+def streaming_fused_scan_ref(q, db, k, metric="dot", valid_n=None,
+                             dead_mask=None, delta=None, delta_valid_n=None,
+                             delta_dead_mask=None, bk: int = 128,
+                             bn: int = 128,
+                             interpret: bool | None = None):
+    """(values, ids) with the streaming op's exact output contract, via the
+    two-pass path. ``bn`` is only used to compute the combined-id offset
+    (the padded base row count)."""
+    scores = _masked_scores(q, db, metric, valid_n, dead_mask, bk, interpret)
+    total = db.shape[0]
+    if delta is not None:
+        dscores = _masked_scores(q, delta, metric, delta_valid_n,
+                                 delta_dead_mask, bk, interpret)
+        # combined-id space: delta ids are offset by the PADDED base rows,
+        # matching the streaming kernel; pad the base side's score block so
+        # column positions line up with those ids
+        base_padded = pad_to(scores, 1, bn, value=NEG_INF)
+        scores = jnp.concatenate([base_padded, dscores], axis=1)
+        total = db.shape[0] + delta.shape[0]
+        k_eff = min(k, total)
+        vals, idxs = topk_scores(scores, k_eff, interpret=interpret)
+        # un-pad the id space is NOT needed: ids < base_padded width are
+        # base-physical, ids >= it are (padded offset + delta row) already
+        return vals, idxs
+    return topk_scores(scores, min(k, total), interpret=interpret)

@@ -21,6 +21,24 @@ from repro.kernels.common import default_interpret, pad_to, tpu_compiler_params
 NEG_INF = float(-3.0e38)
 
 
+def neg_inf_for(dtype) -> float:
+    """Masking/padding sentinel pinned per score dtype: the most negative
+    FINITE value exactly representable in ``dtype`` that still lands at or
+    below ``NEG_INF`` after the kernel's cast to f32 — or -inf when the
+    dtype has no finite value that low (f16 tops out at -65504, far ABOVE
+    the f32 buffer init, so a finite f16 sentinel would beat the empty
+    buffer slots and let a masked row surface as a real candidate).
+    Writing raw ``NEG_INF`` into a narrow dtype instead leaves the sentinel
+    to the dtype's rounding — bf16 happens to round it away from zero
+    today, but that is luck, not a contract."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.float32):
+        return NEG_INF
+    fi = jnp.finfo(dt)
+    lo = float(fi.min)
+    return lo if lo <= NEG_INF else float("-inf")
+
+
 def _topk_kernel(scores_ref, vals_ref, idxs_ref, *, k: int, bn: int):
     j = pl.program_id(1)
 
@@ -64,7 +82,8 @@ def topk_scores(scores: jnp.ndarray, k: int, bm: int = 128, bn: int = 512,
         interpret = default_interpret()
     B, N = scores.shape
     k_eff = min(k, N)
-    sp = pad_to(pad_to(scores, 0, bm), 1, bn, value=NEG_INF)
+    sp = pad_to(pad_to(scores, 0, bm), 1, bn,
+                value=neg_inf_for(scores.dtype))
     Bp, Np = sp.shape
     grid = (Bp // bm, Np // bn)
 

@@ -1,4 +1,4 @@
 """Jitted public op for streaming top-k."""
-from repro.kernels.topk.kernel import topk_scores
+from repro.kernels.topk.kernel import neg_inf_for, topk_scores
 
-__all__ = ["topk_scores"]
+__all__ = ["neg_inf_for", "topk_scores"]

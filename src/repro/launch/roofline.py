@@ -22,6 +22,8 @@ HW = {
     "link_bw": 50e9,        # bytes/s per ICI link
 }
 
+VMEM_BYTES = 16 * 2 ** 20   # per-core VMEM — the old single-dispatch cap
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
@@ -104,6 +106,117 @@ class Roofline:
             "useful_flops_ratio": self.useful_ratio,
             "roofline_fraction": self.roofline_fraction,
         }
+
+
+def modeled_scan_bytes(B: int, N: int, d: int, k: int, masked: bool = True,
+                       dtype_bytes: int = 4) -> dict:
+    """Modeled HBM traffic for one (B, N, d) -> top-k scan dispatch.
+
+    Both paths read the queries and database once and write the (vals, ids)
+    pair. The two-pass path additionally round-trips the f32 (B, N) score
+    matrix through HBM: one write from the distance kernel + one read by
+    top-k, plus a read + write for the elementwise mask pass when padding /
+    tombstones apply (``masked``). The streaming path replaces all of that
+    with one (1, N) f32 row-mask read — the score matrix never exists, so
+    its score-side traffic is O(B·k), not O(B·N).
+
+    ``score_block_bytes`` is the f32 score matrix itself — the quantity
+    that had to fit in VMEM (``VMEM_BYTES``) for the old single-dispatch
+    two-pass scan to avoid spilling."""
+    io = (B * d + N * d) * dtype_bytes + 2 * B * k * 4
+    score_passes = 4 if masked else 2
+    score_block = B * N * 4
+    return {
+        "twopass_bytes": io + score_passes * score_block,
+        "streaming_bytes": io + N * 4,
+        "score_block_bytes": score_block,
+    }
+
+
+def streaming_vs_twopass(ns=(2048, 8192, 32768, 65536), B: int = 128,
+                         d: int = 128, k: int = 16, masked: bool = True,
+                         measure: bool = False, measure_n_cap: int = 4096,
+                         interpret: bool | None = None, seed: int = 0) -> dict:
+    """Sweep table size N from VMEM-resident to beyond the old
+    single-dispatch VMEM limit, reporting modeled HBM bytes for the
+    two-pass vs streaming scan plus (optionally) measured wall-clock per
+    dispatch.
+
+    Off-TPU the kernels run in interpret mode — a Python-stepped grid whose
+    wall-clock says nothing about HBM traffic — so measurement is capped at
+    ``measure_n_cap`` rows there and the modeled bytes carry the
+    comparison; on TPU the cap is lifted and the timings are real."""
+    rows = []
+    for n in ns:
+        m = modeled_scan_bytes(B, n, d, k, masked=masked)
+        row = {
+            "n": int(n),
+            **m,
+            "hbm_ratio": m["twopass_bytes"] / m["streaming_bytes"],
+            "t_memory_twopass_s": m["twopass_bytes"] / HW["hbm_bw"],
+            "t_memory_streaming_s": m["streaming_bytes"] / HW["hbm_bw"],
+            "exceeds_vmem": m["score_block_bytes"] > VMEM_BYTES,
+        }
+        if measure:
+            row["measured"] = _measure_scan_pair(
+                B, n, d, k, masked, measure_n_cap, interpret, seed)
+        rows.append(row)
+    largest = rows[-1]
+    return {
+        "B": B, "d": d, "k": k, "masked": masked,
+        "vmem_bytes": VMEM_BYTES,
+        "sweep": rows,
+        "acceptance": {
+            "largest_n": largest["n"],
+            "hbm_ratio_at_largest_n": largest["hbm_ratio"],
+            "largest_n_exceeds_vmem": largest["exceeds_vmem"],
+            "ok": largest["hbm_ratio"] >= 2.0 and largest["exceeds_vmem"],
+        },
+    }
+
+
+def _measure_scan_pair(B, n, d, k, masked, n_cap, interpret, seed,
+                       reps: int = 3) -> dict:
+    """Median wall-clock (ms) per dispatch for both scan paths at
+    min(n, n_cap) rows (cap only applies in interpret mode)."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.common import default_interpret
+    from repro.kernels.distance.ops import fused_scan
+    from repro.kernels.streaming.ops import streaming_fused_scan
+
+    if interpret is None:
+        interpret = default_interpret()
+    n_run = min(n, n_cap) if interpret else n
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+    db = jnp.asarray(rng.standard_normal((n_run, d)).astype(np.float32))
+    kw = {}
+    if masked:
+        dead = np.zeros(n_run, dtype=bool)
+        dead[:: max(n_run // 64, 1)] = True
+        kw = dict(valid_n=n_run - 1, dead_mask=jnp.asarray(dead))
+
+    def _time(fn):
+        fn()[0].block_until_ready()  # warmup / compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.time()
+            fn()[0].block_until_ready()
+            ts.append((time.time() - t0) * 1e3)
+        return float(np.median(ts))
+
+    return {
+        "n_measured": int(n_run),
+        "interpret": bool(interpret),
+        "streaming_ms": _time(lambda: streaming_fused_scan(
+            q, db, k=k, interpret=interpret, **kw)),
+        "twopass_ms": _time(lambda: fused_scan(
+            q, db, k=k, interpret=interpret, **kw)),
+    }
 
 
 def extract_cost(compiled) -> dict:

@@ -25,15 +25,24 @@ time amortized over the group batch.
 Mutations (DESIGN.md §9): with a ``repro.ingest.MutationView`` attached,
 execution serves the LIVE table instead of the frozen snapshot —
 
-  - base scans thread the tombstone bitmap into ``fused_scan`` as a score
+  - base scans thread the tombstone bitmap into the scan kernel as a score
     mask (deleted rows can never win a top-k slot; under a mesh they are
     over-fetched and filtered on host instead);
   - every index additionally brute-force scans the per-vid DELTA segment
-    (one extra batched dispatch per (group, index)) and merges base + delta
-    candidates by partial score with the canonical (score desc, stable id
-    asc) order — exactly the candidate list an index of the same kind
-    would produce over a from-scratch rebuild whenever its candidate
-    generation is exact (flat always; ANN kinds at exhaustive depth);
+    and merges base + delta candidates by partial score with the canonical
+    (score desc, stable id asc) order — exactly the candidate list an
+    index of the same kind would produce over a from-scratch rebuild
+    whenever its candidate generation is exact (flat always; ANN kinds at
+    exhaustive depth). On the streaming path a flat base + delta pair is
+    ONE ``streaming_fused_scan`` launch (the kernel's second row source);
+    graph/IVF kinds keep a separate delta dispatch because their base
+    candidates are not a flat scan;
+
+Scan kernels (DESIGN.md §11): flat scans default to the single-launch
+``kernels/streaming`` kernel — distance + in-register masking + online
+top-k with no materialized score matrix. ``streaming=False`` (or env
+``REPRO_TWOPASS_SCAN=1``) falls back to the two-pass ``fused_scan``
+reference path; both return identical (values, ids).
   - all returned ids are STABLE item ids (``view.translate``), and the
     rerank gathers each union id from whichever side — base column or
     delta segment — physically holds it;
@@ -42,6 +51,7 @@ execution serves the LIVE table instead of the frozen snapshot —
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 
@@ -54,6 +64,7 @@ from repro.data.vectors import MultiVectorDatabase
 from repro.index.base import exact_topk
 from repro.kernels.distance.kernel import batched_scores
 from repro.kernels.distance.ops import fused_scan
+from repro.kernels.streaming.ops import streaming_fused_scan
 from repro.kernels.topk.kernel import NEG_INF
 from repro.serve.columnstore import ColumnStore, DeviceColumn
 from repro.serve.compiler import PlanGroup, compile_batch, ek_bucket
@@ -84,10 +95,12 @@ class StagedBatch:
 @dataclass
 class DispatchCounters:
     """Kernel-dispatch accounting: ``scan`` counts ONE per (group, index)
-    batched dispatch (flat fused_scan or IVF probe), ``delta`` one per
-    (group, index) delta-segment scan (mutation layer), ``rerank`` one per
-    group needing the union rerank, ``fallback`` one per per-query graph
-    search that could not be batched."""
+    batched dispatch (flat scan or IVF probe — a streaming base+delta
+    merged launch is one ``scan``, its delta rides for free), ``delta``
+    one per SEPARATE delta-segment dispatch (two-pass flat fallback and
+    graph/IVF kinds), ``rerank`` one per group needing the union rerank,
+    ``fallback`` one per per-query graph search that could not be
+    batched."""
 
     scan: int = 0
     delta: int = 0
@@ -124,13 +137,19 @@ class BatchEngine:
 
     def __init__(self, db: MultiVectorDatabase, store=None,
                  cstore: ColumnStore | None = None, mesh=None,
-                 axis: str = "data", interpret: bool | None = None):
+                 axis: str = "data", interpret: bool | None = None,
+                 streaming: bool | None = None):
         self.db = db
         self.store = store
         self.mesh = mesh if mesh is not None else (cstore.mesh if cstore else None)
         self.axis = axis
         self.cstore = cstore or ColumnStore(db, mesh=self.mesh, axis=axis)
         self.interpret = interpret
+        # single-launch streaming scan is the default; the two-pass path is
+        # the reference oracle (streaming=False / REPRO_TWOPASS_SCAN=1)
+        if streaming is None:
+            streaming = os.environ.get("REPRO_TWOPASS_SCAN", "0") != "1"
+        self.streaming = streaming
         self.counters = DispatchCounters()
         self.mview = None  # repro.ingest.MutationView when mutations flow
         self._dist_steps: dict[tuple, object] = {}
@@ -294,11 +313,17 @@ class BatchEngine:
                     costs[i] = float(it.query.dim() * col.n_rows)
                     ndists[i] = col.n_rows
                 return out_ids, costs, ndists, eks_maps
-            # mutated table: masked base scan + delta scan, merged exactly
-            bs, bids = self._base_scan_mv(mv, col, qmat,
-                                          min(group.max_k, col.n_rows))
-            ds, dids, n_delta = self._delta_scan(
-                mv, group.key.vid, items, group.max_k)
+            # mutated table: base + delta merged exactly — ONE streaming
+            # launch when available, else masked base scan + delta scan
+            if self.streaming and self.mesh is None:
+                ms, mids, n_delta = self._merged_scan_mv(
+                    mv, col, qmat, group.key.vid, group.max_k)
+                bs, bids, ds, dids = ms, mids, None, None
+            else:
+                bs, bids = self._base_scan_mv(mv, col, qmat,
+                                              min(group.max_k, col.n_rows))
+                ds, dids, n_delta = self._delta_scan(
+                    mv, group.key.vid, items, group.max_k)
             out_ids = []
             for i, it in enumerate(items):
                 k_i = min(it.query.k, mv.n_live)
@@ -318,8 +343,10 @@ class BatchEngine:
                 eks_maps[i][spec.name] = it.eks[j]
             # with mutations, every branch produces best-first SCORED
             # candidates (stable ids) instead of writing cand directly;
-            # the delta merge below finalizes cand[i][j]
+            # the delta merge below finalizes cand[i][j]. A streaming flat
+            # scan folds the delta into its own launch (delta_merged).
             scored: list | None = [None] * B if mv is not None else None
+            delta_merged = False
             if kind == "ivf":
                 self._ivf_scan(group, spec, j, cand, costs, ndists,
                                mv=mv, scored=scored, sq=sq)
@@ -335,6 +362,15 @@ class BatchEngine:
                         cand[i][j] = ids[i, : min(it.eks[j], col.n_rows)]
                         costs[i] += float(col.dim * col.n_rows)
                         ndists[i] += col.n_rows
+                elif self.streaming and self.mesh is None:
+                    # base + delta in ONE launch (kernel second source)
+                    s, stable, n_dj = self._merged_scan_mv(
+                        mv, col, qmat, spec.vid, bucket)
+                    for i, it in enumerate(items):
+                        scored[i] = (stable[i], s[i])
+                        costs[i] += float(col.dim * (col.n_rows + n_dj))
+                        ndists[i] += col.n_rows + n_dj
+                    delta_merged = True
                 else:
                     s, stable = self._base_scan_mv(
                         mv, col, qmat, min(bucket, col.n_rows))
@@ -356,17 +392,23 @@ class BatchEngine:
                     ndists[i] += res.num_dist
                     self.counters.fallback += 1
             if mv is not None:
-                ds, dids, n_delta = self._delta_scan(
-                    mv, spec.vid, items, bucket)
-                for i, it in enumerate(items):
-                    sids, s = scored[i]
-                    cand[i][j] = self._merge_scored(
-                        s, sids, None if ds is None else ds[i],
-                        None if ds is None else dids[i], it.eks[j])
-                    if n_delta:
-                        d = self.db.dim(spec.vid)
-                        costs[i] += float(d * n_delta)
-                        ndists[i] += n_delta
+                if delta_merged:  # one-launch scan already holds the delta
+                    for i, it in enumerate(items):
+                        sids, s = scored[i]
+                        cand[i][j] = self._merge_scored(s, sids, None, None,
+                                                        it.eks[j])
+                else:
+                    ds, dids, n_delta = self._delta_scan(
+                        mv, spec.vid, items, bucket)
+                    for i, it in enumerate(items):
+                        sids, s = scored[i]
+                        cand[i][j] = self._merge_scored(
+                            s, sids, None if ds is None else ds[i],
+                            None if ds is None else dids[i], it.eks[j])
+                        if n_delta:
+                            d = self.db.dim(spec.vid)
+                            costs[i] += float(d * n_delta)
+                            ndists[i] += n_delta
 
         if group.single_exact:  # scan output is the full-score order already
             out_ids = [cand[i][0][: items[i].query.k] for i in range(B)]
@@ -409,6 +451,10 @@ class BatchEngine:
                 self._dist_steps[key] = make_search_step(
                     self.mesh, k=k, axis=self.axis, valid_n=col.n_rows)
             vals, ids = self._dist_steps[key](col.data, qmat)
+        elif self.streaming:
+            vals, ids = streaming_fused_scan(
+                qmat, col.data, k=min(k, col.n_rows), valid_n=col.n_rows,
+                dead_mask=dead_mask, interpret=self.interpret)
         else:
             vals, ids = fused_scan(qmat, col.data, k=k, valid_n=col.n_rows,
                                    dead_mask=dead_mask,
@@ -458,6 +504,42 @@ class BatchEngine:
         if self.mesh is not None and not dcol.alive.all():
             s = np.where(dcol.alive[ids], s, NEG_INF).astype(np.float32)
         return s, dcol.ids[ids], dcol.n_rows
+
+    def _merged_scan_mv(self, mv, col: DeviceColumn, qmat: jnp.ndarray,
+                        vid, depth: int):
+        """ONE ``streaming_fused_scan`` launch over base + delta: the delta
+        segment rides the kernel's second row source, tombstones on both
+        sides are masked in-register, and the merged best-first candidates
+        come back without ever materializing a score matrix or a separate
+        delta dispatch. Returns (scores, STABLE ids, n_delta_rows) with the
+        same contract as a ``_base_scan_mv`` + ``_delta_scan`` pair already
+        merged; callers finalize with ``_merge_scored`` (lexsort + dead
+        drop) exactly as before, so the (score desc, stable id asc) order
+        is preserved. Requires the streaming path and no mesh — other
+        configurations keep the two-dispatch scan-then-merge."""
+        dcol = mv.delta(vid)
+        dead = mv.base_dead_mask(int(col.data.shape[0]))
+        if dcol is None:  # no delta rows: plain masked base scan
+            s, ids = self._flat_scan_scored(col, qmat,
+                                            min(depth, col.n_rows),
+                                            dead_mask=dead)
+            return s, mv.translate(ids), 0
+        self.counters.scan += 1
+        k_eff = min(depth, col.n_rows + dcol.n_rows)
+        vals, ids = streaming_fused_scan(
+            qmat, col.data, k=k_eff, valid_n=col.n_rows, dead_mask=dead,
+            delta=dcol.col.data, delta_valid_n=dcol.n_rows,
+            delta_dead_mask=dcol.dead_mask, interpret=self.interpret)
+        vals = np.asarray(vals)
+        ids = np.asarray(ids)
+        # combined-physical ids -> stable: delta rows are offset by the
+        # PADDED base row count (the kernel's id space)
+        base_pad_rows = int(col.data.shape[0])
+        stable = np.empty(ids.shape, dtype=np.int64)
+        on_base = ids < base_pad_rows
+        stable[on_base] = mv.translate(ids[on_base])
+        stable[~on_base] = dcol.ids[ids[~on_base] - base_pad_rows]
+        return vals, stable, dcol.n_rows
 
     @staticmethod
     def _merge_scored(s_base, ids_base, s_delta, ids_delta, k: int) -> np.ndarray:

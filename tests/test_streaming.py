@@ -1,0 +1,264 @@
+"""Streaming fused scan parity (DESIGN.md §11).
+
+The one-launch kernel (distance + in-register masking + online top-k,
+optional delta second source) must be BIT-IDENTICAL — values AND ids — to
+the two-pass oracle (``streaming_fused_scan_ref``) across metric × dtype ×
+ragged shapes, and ``BatchEngine``'s one-launch base+delta merged scan
+must equal the two-dispatch merge for every index kind. The fast lane
+keeps smoke cases; the CI ``kernels`` job runs the whole file with
+``-m ""`` so the slow grid is exercised on every PR.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import IndexSpec, QueryPlan, Workload
+from repro.data.vectors import make_database, make_queries
+from repro.index.bruteforce import batch_exact_topk
+from repro.index.ivf import _scan_gathered
+from repro.index.registry import IndexStore
+from repro.ingest import (DeleteBatch, InsertBatch, MutableTable,
+                          MutationView, UpsertBatch)
+from repro.kernels.distance.ops import _mask_rows
+from repro.kernels.streaming.ops import streaming_fused_scan
+from repro.kernels.streaming.ref import streaming_fused_scan_ref
+from repro.kernels.topk.kernel import NEG_INF, neg_inf_for, topk_scores
+from repro.online.trace import row_batch
+from repro.serve.engine import BatchEngine
+
+# ---- kernel-level parity grid ---------------------------------------------
+
+# ragged shape cases: N not a multiple of the 128 row tile, valid_n < N,
+# k > live rows, all rows dead, B == 1, and B == max dispatch batch —
+# with and without the delta second source
+CASES = {
+    "ragged_n": dict(B=4, N=300, d=48, k=20),
+    "pad_and_dead": dict(B=17, N=384, d=100, k=25, valid_n=260, n_dead=30),
+    "k_gt_live": dict(B=3, N=130, d=32, k=200, valid_n=100, n_dead=95),
+    "all_dead": dict(B=2, N=200, d=16, k=10, n_dead=200),
+    "b1_delta": dict(B=1, N=520, d=64, k=50, valid_n=500, n_dead=10,
+                     delta=dict(N=70, valid_n=60, n_dead=5)),
+    "maxbatch_delta": dict(B=128, N=256, d=64, k=10,
+                           delta=dict(N=40, n_dead=0)),
+}
+
+
+def _mk(rng, n, d, dtype):
+    return jnp.asarray(rng.standard_normal((n, d)).astype(np.float32)
+                       ).astype(dtype)
+
+
+def _dead(rng, n, n_dead):
+    if n_dead is None:
+        return None
+    m = np.zeros(n, dtype=bool)
+    if n_dead:
+        m[rng.choice(n, size=n_dead, replace=False)] = True
+    return jnp.asarray(m)
+
+
+def _assert_bit_identical(case, metric, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = _mk(rng, case["B"], case["d"], dtype)
+    db = _mk(rng, case["N"], case["d"], dtype)
+    kw = dict(valid_n=case.get("valid_n"),
+              dead_mask=_dead(rng, case["N"], case.get("n_dead")))
+    dl = case.get("delta")
+    if dl:
+        kw.update(delta=_mk(rng, dl["N"], case["d"], dtype),
+                  delta_valid_n=dl.get("valid_n"),
+                  delta_dead_mask=_dead(rng, dl["N"], dl.get("n_dead")))
+    vals, ids = streaming_fused_scan(q, db, k=case["k"], metric=metric,
+                                     interpret=True, **kw)
+    rvals, rids = streaming_fused_scan_ref(q, db, k=case["k"], metric=metric,
+                                           interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+
+
+@pytest.mark.parametrize("name", ["pad_and_dead", "b1_delta"])
+def test_streaming_parity_smoke(name):
+    _assert_bit_identical(CASES[name], "dot", jnp.float32)
+
+
+@pytest.mark.slow  # full interpret-mode grid; CI kernels job runs it
+@pytest.mark.parametrize("name", sorted(CASES))
+@pytest.mark.parametrize("metric", ["dot", "cosine", "l2"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_streaming_parity_grid(name, metric, dtype):
+    _assert_bit_identical(CASES[name], metric, dtype,
+                          seed=abs(hash(name)) % 1000)
+
+
+def test_streaming_all_dead_tail_contract():
+    """k slots over zero live rows: every slot comes back (NEG_INF, 0) —
+    the contract callers use to drop masked tails."""
+    rng = np.random.default_rng(3)
+    q = _mk(rng, 2, 16, jnp.float32)
+    db = _mk(rng, 200, 16, jnp.float32)
+    vals, ids = streaming_fused_scan(
+        q, db, k=10, dead_mask=jnp.ones(200, bool), interpret=True)
+    assert np.all(np.asarray(vals) == NEG_INF)
+    assert np.all(np.asarray(ids) == 0)
+
+
+# ---- satellite: per-dtype top-k sentinel -----------------------------------
+
+
+def test_neg_inf_for_per_dtype():
+    assert neg_inf_for(jnp.float32) == NEG_INF
+    b = neg_inf_for(jnp.bfloat16)
+    assert np.isfinite(b) and b <= NEG_INF          # finite, representable
+    assert float(jnp.asarray(b, jnp.bfloat16)) == b  # exactly
+    assert neg_inf_for(jnp.float16) == float("-inf")  # -65504 would win slots
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_topk_narrow_dtype_all_dead_tail(dtype):
+    """Regression for the NEG_INF padding sentinel in non-f32 scores: with
+    only 10 live rows and an all-dead tail masked at the dtype sentinel,
+    k=16 must surface exactly the live ids; no masked row (or pad column)
+    may beat an empty buffer slot."""
+    rng = np.random.default_rng(4)
+    s = jnp.asarray(rng.standard_normal((4, 100)).astype(np.float32)
+                    ).astype(dtype)
+    dead = np.zeros(100, dtype=bool)
+    dead[10:] = True
+    s = jnp.where(jnp.asarray(dead)[None, :], neg_inf_for(dtype), s)
+    vals, idxs = topk_scores(s, 16, interpret=True)
+    vals, idxs = np.asarray(vals), np.asarray(idxs)
+    for b in range(4):
+        assert set(idxs[b, :10]) == set(range(10))
+        assert np.all(vals[b, 10:] <= NEG_INF)
+
+
+# ---- satellite: traced valid_n does not recompile per table size ----------
+
+
+def test_mask_rows_single_compile_across_valid_n():
+    if not hasattr(_mask_rows, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    s = jnp.ones((4, 64), jnp.float32)
+    _mask_rows(s, 10, None)
+    base = _mask_rows._cache_size()
+    _mask_rows(s, 33, None)
+    _mask_rows(s, 64, None)
+    assert _mask_rows._cache_size() == base  # valid_n is traced, not static
+
+
+# ---- index entry points route through the kernel ---------------------------
+
+
+def test_batch_exact_topk_kernel_route_matches_blocked():
+    rng = np.random.default_rng(5)
+    data = rng.standard_normal((300, 32)).astype(np.float32)
+    q = rng.standard_normal((5, 32)).astype(np.float32)
+    ids0, s0 = batch_exact_topk(data, q, 20, use_kernel=False)
+    ids1, s1 = batch_exact_topk(data, q, 20, use_kernel=True)
+    np.testing.assert_array_equal(ids0, ids1)
+    np.testing.assert_allclose(s0, s1, rtol=1e-6)
+
+
+def test_ivf_gathered_scan_kernel_route_matches_numpy():
+    rng = np.random.default_rng(6)
+    sub = rng.standard_normal((150, 24)).astype(np.float32)
+    q = rng.standard_normal(24).astype(np.float32)
+    sel0, s0 = _scan_gathered(sub, q, 17, use_kernel=False)
+    sel1, s1 = _scan_gathered(sub, q, 17, use_kernel=True)
+    np.testing.assert_array_equal(sel0, sel1)
+    np.testing.assert_allclose(s0, s1, rtol=1e-6)
+
+
+# ---- engine: one-launch merged scan == two-dispatch merge ------------------
+
+COLS = [("a", 24), ("b", 32)]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(500, COLS, seed=0)
+
+
+def _churned(db, seed=21):
+    t = MutableTable(db)
+    rng = np.random.default_rng(seed)
+    t.apply(InsertBatch(row_batch(db, rng, 40)))
+    t.apply(DeleteBatch(rng.choice(t.live_ids(), size=55, replace=False)))
+    ids = rng.choice(t.live_ids(), size=6, replace=False)
+    t.apply(UpsertBatch(ids, row_batch(db, rng, 6)))
+    return t
+
+
+def _pair_engines(db, t, seed=0, with_store=True):
+    """Two engines over the SAME index structures and the SAME live table;
+    only the scan implementation differs."""
+    es = BatchEngine(db, store=IndexStore(db, seed=seed) if with_store else None,
+                     streaming=True)
+    et = BatchEngine(db, store=IndexStore(db, seed=seed) if with_store else None,
+                     streaming=False)
+    es.attach_mutations(MutationView(t))
+    et.attach_mutations(MutationView(t))
+    return es, et
+
+
+def _assert_engines_equal(es, et, pairs):
+    got = es.search_batch(pairs)
+    ref = et.search_batch(pairs)
+    for (q, _), g, r in zip(pairs, got, ref):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                      err_msg=f"vid={q.vid}")
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf", "hnsw", "diskann"])
+def test_engine_merged_scan_equals_two_dispatch(db, kind):
+    """For every index kind, streaming=True (one merged base+delta launch
+    on flat paths) and streaming=False (separate delta dispatch) must
+    return identical stable ids."""
+    t = _churned(db)
+    es, et = _pair_engines(db, t)
+    qs = make_queries(db, [(0, 1), (0, 1)], k=10, seed=13)
+    pairs = [(qs[0], QueryPlan(qs[0].qid,
+                               [IndexSpec((0,), kind), IndexSpec((1,), kind)],
+                               [40, 40], 1.0, 1.0)),
+             (qs[1], QueryPlan(qs[1].qid, [IndexSpec((0, 1), kind)],
+                               [40], 1.0, 1.0))]
+    _assert_engines_equal(es, et, pairs)
+    if kind == "flat":
+        # the merged launch absorbed the delta dispatches
+        assert es.counters.delta == 0
+        assert et.counters.delta > 0
+
+
+def test_engine_fallback_group_merged_scan(db):
+    """The no-spec (planless) group also rides the one-launch merge."""
+    t = _churned(db, seed=22)
+    es, et = _pair_engines(db, t, with_store=False)
+    qs = make_queries(db, [(0,), (1,), (0, 1)], k=10, seed=14)
+    pairs = [(q, QueryPlan(q.qid, [], [], 1.0, 1.0)) for q in qs]
+    _assert_engines_equal(es, et, pairs)
+    assert es.counters.delta == 0 and et.counters.delta > 0
+
+
+def test_engine_env_flag_selects_two_pass(db, monkeypatch):
+    monkeypatch.setenv("REPRO_TWOPASS_SCAN", "1")
+    assert BatchEngine(db).streaming is False
+    monkeypatch.delenv("REPRO_TWOPASS_SCAN")
+    assert BatchEngine(db).streaming is True
+
+
+@pytest.mark.slow
+def test_engine_streaming_matches_workload_metrics(db):
+    """execute_batch metrics (cost / ndists / recall inputs) are identical
+    across scan implementations — the merged launch changes dispatch
+    count, not accounting."""
+    t = _churned(db, seed=23)
+    es, et = _pair_engines(db, t)
+    qs = make_queries(db, [(0,), (0, 1)], k=10, seed=15)
+    wl = Workload(queries=qs, probs=np.ones(len(qs)))
+    pairs = [(q, QueryPlan(q.qid, [IndexSpec(q.vid, "flat")], [30], 1.0, 1.0))
+             for q in wl.queries]
+    ms = es.execute_batch(pairs)
+    mt = et.execute_batch(pairs)
+    for a, b in zip(ms, mt):
+        assert a.cost == b.cost and a.num_dist == b.num_dist
+        np.testing.assert_array_equal(a.ids, b.ids)
