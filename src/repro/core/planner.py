@@ -99,9 +99,21 @@ class WhatIfContext:
 # --------------------------------------------------------------------------
 
 
-def _plan_cost(ctx: WhatIfContext, specs: list[IndexSpec], eks: list[float]) -> float:
+def _plan_cost(ctx: WhatIfContext, specs: list[IndexSpec], eks: list[float],
+               selectivity: float = 1.0) -> float:
     """Eq. 4: index-scan + rerank. Single exact-vid index plans skip rerank
-    (the index already scores the full query — paper case study, Table 3)."""
+    (the index already scores the full query — paper case study, Table 3).
+
+    ``selectivity`` is the filtered-search term (DESIGN.md §12): a
+    post-filter plan must over-fetch each index by 1/selectivity so ~ek
+    matching candidates survive the predicate, so every ek is inflated
+    (capped at the table size) before costing. selectivity=1.0 (the
+    default) is the unfiltered cost, bit-identical to the old behavior."""
+    if selectivity < 1.0:
+        n = float(ctx.est.n_rows)
+        floor = 1.0 / max(n, 1.0)
+        s = max(float(selectivity), floor)
+        eks = [min(float(np.ceil(ek / s)), n) if ek > 0 else 0.0 for ek in eks]
     used = [(x, ek) for x, ek in zip(specs, eks) if ek > 0]
     cost = sum(ctx.est.cost_idx(x, ek) for x, ek in used)
     if len(used) == 1 and used[0][0].vid == ctx.query.vid:
@@ -354,6 +366,10 @@ class QueryPlanner:
     dp_samples: int = 3
     seed: int = 0
     use_jax_dp: bool = False  # vectorized Algorithm 2 (planner_jax)
+    # filtered search (DESIGN.md §12): the attribute store and a sampled
+    # SelectivityEstimator; both None keeps the planner purely vector
+    attributes: object = None
+    selectivity: object = None
     _contexts: dict[int, WhatIfContext] = field(default_factory=dict)
     _cstore: object = None  # shared ColumnStore across contexts
 
@@ -377,30 +393,93 @@ class QueryPlanner:
         coverage × theta_hit — plan coverage to theta_recall / theta_hit."""
         return min(1.0, self.theta_recall / self.estimators.theta_hit)
 
-    def plan(self, query: Query, config) -> QueryPlan:
+    def plan(self, query: Query, config,
+             force_access: str | None = None) -> QueryPlan:
         ctx = self.context(query)
         specs = self.useful_indexes(query, config)
-        if not specs:
-            return ctx.flat_scan_plan()
-        if len(specs) <= 3:
-            p = algorithm1_search(ctx, specs, self.theta_plan)
-        elif self.use_jax_dp:
-            from repro.core.planner_jax import plan_dp_jax
-            p = plan_dp_jax(ctx, specs, self.theta_plan,
-                            k_prime=self.dp_k_prime, n_samples=self.dp_samples,
-                            seed=self.seed)
-        else:
-            p = algorithm2_dp(ctx, specs, self.theta_plan,
-                              k_prime=self.dp_k_prime, n_samples=self.dp_samples,
-                              seed=self.seed)
-            # DP is approximate — for safety also try the best ≤3-subset built
-            # from the lowest-ek closers when DP fails
-            if p is None:
-                for sub in ([specs[0]], specs[:2], specs[:3]):
-                    q = algorithm1_search(ctx, sub, self.theta_plan)
-                    if q is not None and (p is None or q.est_cost < p.est_cost):
-                        p = q
+        pred = getattr(query, "predicate", None)
+        if pred is not None:
+            return self._plan_filtered(query, ctx, specs, pred, force_access)
+        p = self._index_plan(ctx, specs) if specs else None
         if p is None:
             return ctx.flat_scan_plan()
         flat = ctx.flat_scan_plan()
         return p if p.est_cost <= flat.est_cost else flat
+
+    def _index_plan(self, ctx: WhatIfContext, specs) -> QueryPlan | None:
+        """Best unfiltered index plan (Alg 1 / Alg 2), no flat comparison."""
+        if len(specs) <= 3:
+            return algorithm1_search(ctx, specs, self.theta_plan)
+        if self.use_jax_dp:
+            from repro.core.planner_jax import plan_dp_jax
+            return plan_dp_jax(ctx, specs, self.theta_plan,
+                               k_prime=self.dp_k_prime,
+                               n_samples=self.dp_samples, seed=self.seed)
+        p = algorithm2_dp(ctx, specs, self.theta_plan,
+                          k_prime=self.dp_k_prime, n_samples=self.dp_samples,
+                          seed=self.seed)
+        # DP is approximate — for safety also try the best ≤3-subset built
+        # from the lowest-ek closers when DP fails
+        if p is None:
+            for sub in ([specs[0]], specs[:2], specs[:3]):
+                q = algorithm1_search(ctx, sub, self.theta_plan)
+                if q is not None and (p is None or q.est_cost < p.est_cost):
+                    p = q
+        return p
+
+    # ---- filtered search (DESIGN.md §12) ---------------------------------
+
+    def _selectivity_of(self, pred) -> float:
+        if self.selectivity is not None:
+            return float(self.selectivity.estimate(pred))
+        if self.attributes is not None:
+            # lazily build a default estimator over the base rows
+            from repro.filter.selectivity import SelectivityEstimator
+            self.selectivity = SelectivityEstimator(
+                self.attributes, np.arange(self.database.n_rows),
+                seed=self.seed)
+            return float(self.selectivity.estimate(pred))
+        # no attribute info: assume the predicate passes everything, so
+        # the masked path (≈ the unfiltered scan) is chosen
+        return 1.0
+
+    def _plan_filtered(self, query: Query, ctx: WhatIfContext, specs, pred,
+                       force_access: str | None = None) -> QueryPlan:
+        """Access-path choice per (query, predicate): cost out pre-filter
+        gather, keep-masked scan, and 1/selectivity-inflated post-filter
+        probe, and take the cheapest (``force_access`` pins one — bench /
+        test hook). Candidates are ordered masked, post, pre so exact cost
+        ties at the crossover resolve to the scan-shaped paths."""
+        from repro.filter.selectivity import (inflate_eks, masked_scan_cost,
+                                              prefilter_cost)
+        n = float(self.estimators.n_rows)
+        sel = self._selectivity_of(pred)
+        qdim = query.dim()
+        if sel <= 0.0:
+            # known-empty predicate: only the bitmap is ever evaluated
+            return QueryPlan(query.qid, [], [],
+                             est_cost=prefilter_cost(qdim, n, 0.0),
+                             est_recall=1.0, access_path="pre",
+                             selectivity=0.0)
+        cands = [QueryPlan(query.qid, [], [], masked_scan_cost(qdim, n), 1.0,
+                           access_path="masked", selectivity=sel)]
+        if specs:
+            p = self._index_plan(ctx, specs)
+            if p is not None and p.indexes:
+                cost = _plan_cost(ctx, p.indexes, p.eks, selectivity=sel)
+                # execution needs no estimator: the inflated eks are
+                # stored in the plan itself
+                inflated = inflate_eks(p.eks, sel, int(n))
+                cands.append(QueryPlan(query.qid, list(p.indexes), inflated,
+                                       cost, p.est_recall,
+                                       access_path="post", selectivity=sel))
+        cands.append(QueryPlan(query.qid, [], [],
+                               prefilter_cost(qdim, n, sel), 1.0,
+                               access_path="pre", selectivity=sel))
+        if force_access is not None:
+            forced = [c for c in cands if c.access_path == force_access]
+            if not forced:
+                raise ValueError(
+                    f"no {force_access!r} plan available for q#{query.qid}")
+            return forced[0]
+        return min(cands, key=lambda c: c.est_cost)

@@ -34,7 +34,16 @@ class Mint:
     sample_rate: float = 0.01
     min_sample_rows: int = 2000
     estimators: EstimatorBundle | None = None
+    # filtered search (DESIGN.md §12): optional AttributeStore keyed by the
+    # table's stable ids. When set, planners get a sampled selectivity
+    # estimator, filtered workload queries cost out their access paths
+    # (pre/masked/post), and tune() therefore shifts index choice with the
+    # workload's filter distribution — heavily filtered traffic plans to
+    # pre-filter gathers, which need no index at all.
+    attributes: object = None
+    filter_sample: int = 512
     _sample: MultiVectorDatabase | None = None
+    _selest: object = None
 
     def train(self) -> EstimatorBundle:
         if self.estimators is None:
@@ -46,10 +55,30 @@ class Mint:
                                              seed=self.seed)
         return self.estimators
 
+    def selectivity_estimator(self, ids=None):
+        """Sampled selectivity estimator over the attribute store (None
+        when no attributes are attached). Shared across planners so the
+        per-predicate cache amortizes. ``ids`` overrides the sampled id
+        population (default: the base row ids 0..n-1) — post-compaction
+        callers pass the live STABLE ids, which are no longer a range."""
+        if self.attributes is None:
+            return None
+        if self._selest is None:
+            from repro.filter.selectivity import SelectivityEstimator
+            self._selest = SelectivityEstimator(
+                self.attributes,
+                np.arange(self.db.n_rows) if ids is None else ids,
+                sample_size=self.filter_sample, seed=self.seed)
+        elif ids is not None:
+            self._selest.refresh(ids)
+        return self._selest
+
     def planner(self, constraints: Constraints) -> QueryPlanner:
         self.train()
         return QueryPlanner(estimators=self.estimators, database=self.db,
-                            theta_recall=constraints.theta_recall, seed=self.seed)
+                            theta_recall=constraints.theta_recall,
+                            seed=self.seed, attributes=self.attributes,
+                            selectivity=self.selectivity_estimator())
 
     def tune(self, workload: Workload, constraints: Constraints,
              params: BeamSearchParams | None = None,
@@ -296,6 +325,10 @@ def execute_plan(db: MultiVectorDatabase, store: IndexStore, query: Query,
     path stays as the numpy oracle the batched engine is tested against.
     ``cstore`` (a ``serve.columnstore.ColumnStore``) caches the per-vid
     concats instead of rebuilding them per call."""
+    if getattr(query, "predicate", None) is not None:
+        raise NotImplementedError(
+            "filtered queries execute through serve.engine.BatchEngine "
+            "(attach_filters) — this per-query oracle is unfiltered")
     t0 = time.time()
     k = query.k
     concat = cstore.host if cstore is not None else db.concat

@@ -68,6 +68,10 @@ class Query:
     vid: Vid
     vectors: dict[int, np.ndarray]
     k: int = 100
+    # optional attribute predicate (repro.filter AST node, hashable).
+    # None = pure vector query; set -> results are the top-k over the live
+    # rows matching the predicate (DESIGN.md §12).
+    predicate: object = None
 
     def __post_init__(self):
         self.vid = norm_vid(self.vid)
@@ -124,6 +128,13 @@ class QueryPlan:
     eks: list[int]
     est_cost: float
     est_recall: float
+    # filtered-search fields (DESIGN.md §12): how to apply the query's
+    # predicate — "pre" (gather matching rows, brute force), "masked"
+    # (keep_mask composed into the fused scan), or "post" (index probe at
+    # 1/selectivity-inflated eks, filter candidates). None for unfiltered
+    # plans; ``selectivity`` records the estimate the choice was based on.
+    access_path: str | None = None
+    selectivity: float | None = None
 
     def __post_init__(self):
         # Drop unused indexes (ek == 0) — they incur no scan and no rerank.
@@ -137,9 +148,12 @@ class QueryPlan:
 
     def describe(self) -> str:
         parts = [f"{x.name}: ek={ek}" for x, ek in zip(self.indexes, self.eks)]
+        acc = ""
+        if self.access_path is not None:
+            acc = f", access={self.access_path}@{self.selectivity:.3g}"
         return (
             f"plan(q#{self.query_qid}; {'; '.join(parts) or 'EMPTY'}; "
-            f"cost={self.est_cost:.1f}, recall={self.est_recall:.3f})"
+            f"cost={self.est_cost:.1f}, recall={self.est_recall:.3f}{acc})"
         )
 
 

@@ -137,26 +137,41 @@ class IngestRuntime(OnlineRuntime):
         batcher lock, so this cannot deadlock) — which is also what keeps
         async flush results bit-identical to the sync baseline under
         churn."""
+        return self._mutate(mutation)
+
+    def _mutate(self, mutation, attributes=None) -> tuple[int, np.ndarray]:
         with self.batcher.lock:
             self.batcher.sync_inflight()
-            return self.table.apply(mutation)
+            lsn, ids = self.table.apply(mutation)
+            if attributes is not None:
+                # attributes ride the mutation under the SAME lock hold:
+                # a flush sees the rows and their attributes together, or
+                # neither — a filtered scan never observes a half-applied
+                # (vectors, attributes) pair
+                if self.engine.attrs is None:
+                    raise ValueError(
+                        "mutation carries attributes but the engine has no "
+                        "AttributeStore attached")
+                self.engine.attrs.put(ids, attributes)
+        return lsn, ids
 
-    def insert(self, vectors) -> np.ndarray:
-        return self.mutate(InsertBatch(vectors))[1]
+    def insert(self, vectors, attributes=None) -> np.ndarray:
+        return self._mutate(InsertBatch(vectors), attributes)[1]
 
     def delete(self, ids) -> int:
         lsn, _ = self.mutate(DeleteBatch(np.asarray(ids)))
         return lsn
 
-    def upsert(self, ids, vectors) -> np.ndarray:
-        return self.mutate(UpsertBatch(np.asarray(ids), vectors))[1]
+    def upsert(self, ids, vectors, attributes=None) -> np.ndarray:
+        return self._mutate(UpsertBatch(np.asarray(ids), vectors),
+                            attributes)[1]
 
     def apply_timed(self, tm: TimedMutation) -> None:
         """Resolve one trace mutation against the live table and apply it
         (``ingest.mutation.resolve_timed``)."""
         mutation = resolve_timed(self.table, tm)
         if mutation is not None:
-            self.mutate(mutation)
+            self._mutate(mutation, getattr(tm, "attributes", None))
 
     # ---- serving loop -----------------------------------------------------
 
@@ -337,8 +352,15 @@ class IngestRuntime(OnlineRuntime):
             # rebuild the tuner over the compacted snapshot: estimators and
             # the what-if sample must describe the LIVE data distribution
             self.mint = dc_replace(self.mint, db=self.db, estimators=None,
-                                   _sample=None)
+                                   _sample=None, _selest=None)
             self.planner = self.mint.planner(self.constraints)
+            if self.mint.attributes is not None:
+                # fresh selectivity estimator over the compacted LIVE ids
+                # (stable ids are no longer a 0..n range after a fold);
+                # also drops the engine's per-version filter bitmap cache
+                selest = self.mint.selectivity_estimator(
+                    ids=self.table.live_ids())
+                self.engine.attach_filters(self.mint.attributes, selest)
             try:
                 observed = self.monitor.observed_workload()
             except ValueError:  # nothing served yet: fall back to tuned mix

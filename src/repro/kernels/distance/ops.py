@@ -12,28 +12,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import pad_to
 from repro.kernels.distance.kernel import batched_scores
 from repro.kernels.topk.kernel import NEG_INF, topk_scores
 
 
 @jax.jit
-def _mask_rows(scores: jnp.ndarray, valid_n, dead) -> jnp.ndarray:
+def _mask_rows(scores: jnp.ndarray, valid_n, dead, keep=None) -> jnp.ndarray:
     """ONE fused elementwise pass over the score matrix: rows at or past
-    ``valid_n`` (padding) and tombstoned rows both go to NEG_INF in a
-    single ``jnp.where``. ``valid_n`` is a TRACED scalar — every live-row
+    ``valid_n`` (padding), tombstoned rows, and rows outside the predicate
+    ``keep`` bitmap all go to NEG_INF in a single ``jnp.where``.
+    ``valid_n`` is a TRACED scalar — every live-row
     count shares one compiled program (the old static-argnum version
     recompiled per table size and burned an extra full (B, N) HBM
-    read/write per mask). ``dead`` is None (structural — compiles a
-    no-tombstone variant) or an (N,) bool bitmap."""
+    read/write per mask). ``dead`` / ``keep`` are None (structural —
+    compiles a variant without that mask) or (N,) bool bitmaps."""
     bad = jnp.arange(scores.shape[1]) >= valid_n
     if dead is not None:
         bad = bad | dead
+    if keep is not None:
+        bad = bad | ~keep
     return jnp.where(bad[None, :], NEG_INF, scores)
 
 
 def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
                valid_n: int | None = None,
                dead_mask: jnp.ndarray | None = None,
+               keep_mask: jnp.ndarray | None = None,
                interpret: bool | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The TPU-native index scan: (B, d) queries over (N, d) rows -> top-k
     (values, indices). Composition of the MXU distance kernel and the
@@ -50,14 +55,22 @@ def fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int, metric: str = "dot",
     never surface in a result: when fewer than k rows are alive, the tail
     slots come back at NEG_INF and the caller drops them. The rows are
     still scanned (cost accounting is unchanged) — reclaiming the scan work
-    itself is the compactor's job, not the mask's."""
+    itself is the compactor's job, not the mask's.
+
+    ``keep_mask`` is the filter layer's predicate bitmap (True = row
+    matches); non-matching rows are masked to -inf in the same fused pass
+    as padding and tombstones (keep ∧ ¬dead composition)."""
     scores = batched_scores(q, db, metric=metric, interpret=interpret)
     has_pad = valid_n is not None and valid_n < db.shape[0]
     if has_pad:
         k = min(k, int(valid_n))
-    if has_pad or dead_mask is not None:
+    if has_pad or dead_mask is not None or keep_mask is not None:
         vn = db.shape[0] if valid_n is None else valid_n
-        scores = _mask_rows(scores, vn, dead_mask)
+        keep = None
+        if keep_mask is not None:
+            n = db.shape[0]
+            keep = pad_to(keep_mask.astype(bool), 0, n)[:n]
+        scores = _mask_rows(scores, vn, dead_mask, keep)
     return topk_scores(scores, k, interpret=interpret)
 
 

@@ -13,12 +13,19 @@ from repro.kernels.common import default_interpret, pad_to, tpu_compiler_params
 from repro.kernels.streaming.kernel import streaming_kernel
 
 
-def _bad_mask(n_padded: int, valid_n, dead_mask) -> jnp.ndarray:
+def _bad_mask(n_padded: int, valid_n, dead_mask,
+              keep_mask=None) -> jnp.ndarray:
     """(1, n_padded) f32 0/1 row mask: 1 = padding past ``valid_n`` (a
-    TRACED scalar — no per-table-size recompiles) or tombstoned."""
+    TRACED scalar — no per-table-size recompiles), tombstoned, or filtered
+    out by ``keep_mask`` (predicate bitmap, True = row matches). The
+    keep ∧ ¬dead composition happens here, so predicate masking rides the
+    same in-register (1, N) row operand as tombstones."""
     bad = jnp.arange(n_padded, dtype=jnp.int32) >= valid_n
     if dead_mask is not None:
         bad = bad | pad_to(dead_mask.astype(bool), 0, n_padded)[:n_padded]
+    if keep_mask is not None:
+        # pad_to pads with 0 = False = not kept, so padded rows stay bad
+        bad = bad | ~pad_to(keep_mask.astype(bool), 0, n_padded)[:n_padded]
     return bad.astype(jnp.float32)[None, :]
 
 
@@ -30,6 +37,8 @@ def streaming_fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int,
                          delta: jnp.ndarray | None = None,
                          delta_valid_n=None,
                          delta_dead_mask: jnp.ndarray | None = None,
+                         keep_mask: jnp.ndarray | None = None,
+                         delta_keep_mask: jnp.ndarray | None = None,
                          bm: int = 128, bn: int = 128, bk: int = 128,
                          interpret: bool | None = None
                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -39,7 +48,9 @@ def streaming_fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int,
 
     ``valid_n`` / ``delta_valid_n`` are TRACED scalars (rows at or past
     them are masked in-register); ``dead_mask`` / ``delta_dead_mask`` are
-    per-source tombstone bitmaps. Ids are combined-physical: base row i is
+    per-source tombstone bitmaps; ``keep_mask`` / ``delta_keep_mask`` are
+    per-source predicate bitmaps (True = row matches the filter) composed
+    into the same (1, N) row-mask operand. Ids are combined-physical: base row i is
     id i; delta row r is id ``db.shape[0] + r`` (callers map delta ids back
     with the padded base row count). When fewer than k live rows exist the
     tail slots come back at NEG_INF with id 0, exactly like the two-pass
@@ -71,7 +82,8 @@ def streaming_fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int,
     nbt = Nbp // bn
 
     valid_b = Nb if valid_n is None else valid_n
-    bbad = pad_to(_bad_mask(Nbp, valid_b, dead_mask), 1, bn, value=1.0)
+    bbad = pad_to(_bad_mask(Nbp, valid_b, dead_mask, keep_mask),
+                  1, bn, value=1.0)
 
     k_eff = min(k, Nb + Nd)
     operands = [qp, dbp]
@@ -86,7 +98,8 @@ def streaming_fused_scan(q: jnp.ndarray, db: jnp.ndarray, k: int,
         Ndp = dltp.shape[0]
         ndt = Ndp // bn
         valid_d = Nd if delta_valid_n is None else delta_valid_n
-        dbad = pad_to(_bad_mask(Ndp, valid_d, delta_dead_mask),
+        dbad = pad_to(_bad_mask(Ndp, valid_d, delta_dead_mask,
+                                delta_keep_mask),
                       1, bn, value=1.0)
         dsqp = pad_to(dsq, 1, bn, value=1.0)
         operands += [dltp, qsqp, bsqp, dsqp, bbad, dbad]

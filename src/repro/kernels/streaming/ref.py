@@ -17,28 +17,34 @@ from repro.kernels.distance.kernel import batched_scores
 from repro.kernels.topk.kernel import NEG_INF, topk_scores
 
 
-def _masked_scores(q, db, metric, valid_n, dead_mask, bk, interpret):
+def _masked_scores(q, db, metric, valid_n, dead_mask, bk, interpret,
+                   keep_mask=None):
     scores = batched_scores(q, db, metric=metric, bk=bk, interpret=interpret)
     n = db.shape[0]
     bad = jnp.arange(n) >= (n if valid_n is None else valid_n)
     if dead_mask is not None:
         bad = bad | pad_to(dead_mask.astype(bool), 0, n)[:n]
+    if keep_mask is not None:
+        bad = bad | ~pad_to(keep_mask.astype(bool), 0, n)[:n]
     return jnp.where(bad[None, :], NEG_INF, scores)
 
 
 def streaming_fused_scan_ref(q, db, k, metric="dot", valid_n=None,
                              dead_mask=None, delta=None, delta_valid_n=None,
-                             delta_dead_mask=None, bk: int = 128,
+                             delta_dead_mask=None, keep_mask=None,
+                             delta_keep_mask=None, bk: int = 128,
                              bn: int = 128,
                              interpret: bool | None = None):
     """(values, ids) with the streaming op's exact output contract, via the
     two-pass path. ``bn`` is only used to compute the combined-id offset
     (the padded base row count)."""
-    scores = _masked_scores(q, db, metric, valid_n, dead_mask, bk, interpret)
+    scores = _masked_scores(q, db, metric, valid_n, dead_mask, bk, interpret,
+                            keep_mask)
     total = db.shape[0]
     if delta is not None:
         dscores = _masked_scores(q, delta, metric, delta_valid_n,
-                                 delta_dead_mask, bk, interpret)
+                                 delta_dead_mask, bk, interpret,
+                                 delta_keep_mask)
         # combined-id space: delta ids are offset by the PADDED base rows,
         # matching the streaming kernel; pad the base side's score block so
         # column positions line up with those ids

@@ -109,7 +109,9 @@ class Roofline:
 
 
 def modeled_scan_bytes(B: int, N: int, d: int, k: int, masked: bool = True,
-                       dtype_bytes: int = 4) -> dict:
+                       dtype_bytes: int = 4, selectivity: float | None = None,
+                       attr_bytes: int = 4,
+                       gather_amplification: float = 2.0) -> dict:
     """Modeled HBM traffic for one (B, N, d) -> top-k scan dispatch.
 
     Both paths read the queries and database once and write the (vals, ids)
@@ -122,15 +124,39 @@ def modeled_scan_bytes(B: int, N: int, d: int, k: int, masked: bool = True,
 
     ``score_block_bytes`` is the f32 score matrix itself — the quantity
     that had to fit in VMEM (``VMEM_BYTES``) for the old single-dispatch
-    two-pass scan to avoid spilling."""
+    two-pass scan to avoid spilling.
+
+    With ``selectivity`` set (DESIGN.md §12), two filtered terms are added:
+      masked_filtered_bytes : streaming scan + one extra (1, N) keep-bitmap
+                              row read (the predicate mask kernel operand)
+                              plus the host-side bitmap build — one
+                              ``attr_bytes`` column pass over N rows;
+      prefilter_bytes       : bitmap build + a gathered brute-force pass
+                              over sel·N rows; the gather reads rows
+                              non-contiguously, so its row bytes carry
+                              ``gather_amplification`` (matches the
+                              planner's GATHER_OVERHEAD term — both put
+                              the pre/masked crossover at sel = 1/(1+γ)).
+    """
     io = (B * d + N * d) * dtype_bytes + 2 * B * k * 4
     score_passes = 4 if masked else 2
     score_block = B * N * 4
-    return {
+    out = {
         "twopass_bytes": io + score_passes * score_block,
         "streaming_bytes": io + N * 4,
         "score_block_bytes": score_block,
     }
+    if selectivity is not None:
+        sel = min(max(float(selectivity), 0.0), 1.0)
+        bitmap = N * attr_bytes + N  # column pass + packed bool bitmap out
+        rows_kept = sel * N
+        gathered_io = (B * d + gather_amplification * rows_kept * d
+                       ) * dtype_bytes + 2 * B * k * 4
+        out["selectivity"] = sel
+        out["bitmap_bytes"] = bitmap
+        out["masked_filtered_bytes"] = out["streaming_bytes"] + N + bitmap
+        out["prefilter_bytes"] = gathered_io + bitmap
+    return out
 
 
 def streaming_vs_twopass(ns=(2048, 8192, 32768, 65536), B: int = 128,

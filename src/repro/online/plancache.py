@@ -33,6 +33,10 @@ class PlanKey:
     constraints: tuple  # constraints_fingerprint(...)
     generation: int
     tenant: TenantId = DEFAULT_TENANT
+    # predicate AST node (frozen/hashable) — filtered queries must not
+    # share templates with unfiltered ones or with other predicates, since
+    # access path and inflated eks depend on the predicate's selectivity
+    pred: object = None
 
 
 @dataclass
@@ -43,16 +47,22 @@ class PlanTemplate:
     eks: list[int]
     est_cost: float
     est_recall: float
+    access_path: str | None = None
+    selectivity: float | None = None
 
     @classmethod
     def from_plan(cls, plan: QueryPlan) -> "PlanTemplate":
         return cls(indexes=list(plan.indexes), eks=list(plan.eks),
-                   est_cost=plan.est_cost, est_recall=plan.est_recall)
+                   est_cost=plan.est_cost, est_recall=plan.est_recall,
+                   access_path=plan.access_path,
+                   selectivity=plan.selectivity)
 
     def instantiate(self, query: Query) -> QueryPlan:
         return QueryPlan(query_qid=query.qid, indexes=list(self.indexes),
                          eks=list(self.eks), est_cost=self.est_cost,
-                         est_recall=self.est_recall)
+                         est_recall=self.est_recall,
+                         access_path=self.access_path,
+                         selectivity=self.selectivity)
 
 
 def constraints_fingerprint(constraints: Constraints) -> tuple:
@@ -103,7 +113,8 @@ class PlanCache:
     def key(self, query: Query, tenant: TenantId = DEFAULT_TENANT) -> PlanKey:
         return PlanKey(vid=query.vid, k=query.k,
                        constraints=self._fingerprint(tenant),
-                       generation=self.generation_of(tenant), tenant=tenant)
+                       generation=self.generation_of(tenant), tenant=tenant,
+                       pred=getattr(query, "predicate", None))
 
     def get(self, query: Query,
             tenant: TenantId = DEFAULT_TENANT) -> QueryPlan | None:

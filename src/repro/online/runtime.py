@@ -75,6 +75,11 @@ class OnlineRuntime:
         self.engine = engine or BatchEngine(db, store=self.store)
         if self.engine.store is not self.store:
             self.engine.swap_store(self.store)
+        if getattr(mint, "attributes", None) is not None:
+            # filtered serving: the engine needs the attribute store for
+            # keep bitmaps, and shares the tuner's selectivity estimator
+            self.engine.attach_filters(mint.attributes,
+                                       mint.selectivity_estimator())
         self.planner = mint.planner(constraints)
         self.cache = PlanCache(constraints=constraints_fingerprint(constraints))
         self.cache.seed(workload, self.result)

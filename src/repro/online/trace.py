@@ -22,12 +22,17 @@ with globally unique qids, at a fixed arrival rate (``qps``). Scenarios:
                    manifold rows), delete picks, and upserts at
                    configurable rates (the ingest subsystem's scenario;
                    ``repro.ingest.IngestRuntime.run_mixed_trace`` replays
-                   it).
+                   it);
+  - ``filtered`` : queries carrying attribute predicates (DESIGN.md §12)
+                   with a configurable selectivity mix — quantile ranges
+                   over a numeric field hit each target selectivity — and
+                   a hot-predicate skew knob (a few predicates dominate,
+                   the filtered plan cache's best case).
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 
 import numpy as np
 
@@ -57,6 +62,7 @@ class TimedMutation:
     vectors: list | None = None  # per-column blocks (insert / upsert)
     seed: int = 0                # live-id pick for delete / upsert targets
     tenant: TenantId = DEFAULT_TENANT
+    attributes: dict | None = None  # per-field values riding insert/upsert
 
 
 def row_batch(db: MultiVectorDatabase, rng: np.random.Generator, n: int,
@@ -291,10 +297,65 @@ def churn_trace(db: MultiVectorDatabase, workload: Workload, n: int,
     return out
 
 
+def filtered_trace(db: MultiVectorDatabase, workload: Workload, attrs, n: int,
+                   qps: float = 200.0, field: str = "score",
+                   selectivity_mix: tuple = ((0.01, 0.25), (0.1, 0.25),
+                                             (0.5, 0.25), (1.0, 0.25)),
+                   n_hot: int = 4, p_hot: float = 0.0,
+                   k: int | None = None, seed: int = 0, t0: float = 0.0,
+                   qid_start: int = 0) -> list[TimedQuery]:
+    """Filtered-search scenario (DESIGN.md §12): each query carries a
+    ``Range`` predicate over the numeric ``field`` whose width is a
+    quantile slice of the observed values — so the predicate's TRUE
+    selectivity matches the drawn target. ``selectivity_mix`` is a tuple of
+    (selectivity, weight) pairs; selectivity 1.0 emits an UNFILTERED query
+    (predicate None). With probability ``p_hot`` a query reuses one of
+    ``n_hot`` pre-drawn hot predicates instead of a fresh one — skewed
+    predicate popularity, the filtered plan cache's best case."""
+    from repro.filter import Range
+    sels = np.asarray([s for s, _ in selectivity_mix], dtype=np.float64)
+    ws = np.asarray([w for _, w in selectivity_mix], dtype=np.float64)
+    if ws.sum() <= 0 or (ws < 0).any():
+        raise ValueError("selectivity_mix weights must be non-negative "
+                         "with positive mass")
+    ws = ws / ws.sum()
+    vals = attrs.take(field, np.arange(db.n_rows))
+    vals = np.sort(vals[~np.isnan(vals)])
+    if vals.size == 0:
+        raise ValueError(f"field {field!r} has no populated values")
+    vids, probs = _workload_vids(workload)
+    k = k if k is not None else workload.queries[0].k
+    fac = _QueryFactory(db, k, seed, qid_start=qid_start)
+
+    def draw_pred():
+        sel = float(sels[int(fac.rng.choice(len(sels), p=ws))])
+        if sel >= 1.0:
+            return None
+        lo_q = float(fac.rng.uniform(0.0, 1.0 - sel))
+        lo = float(np.quantile(vals, lo_q))
+        hi = float(np.quantile(vals, min(lo_q + sel, 1.0)))
+        return Range(field, lo=lo, hi=hi)
+
+    hot = [draw_pred() for _ in range(n_hot)] if p_hot > 0 else []
+    out = []
+    for i in range(n):
+        vid = vids[int(fac.rng.choice(len(vids), p=probs))]
+        if hot and fac.rng.random() < p_hot:
+            pred = hot[int(fac.rng.integers(len(hot)))]
+        else:
+            pred = draw_pred()
+        q = fac.make(vid)
+        if pred is not None:
+            q = dc_replace(q, predicate=pred)
+        out.append(TimedQuery(t=t0 + i / qps, query=q))
+    return out
+
+
 def make_trace(db: MultiVectorDatabase, scenario: str, **kw) -> list[TimedQuery]:
     gens = {"steady": steady_trace, "diurnal": diurnal_trace,
             "burst": burst_trace, "hot_item": hot_item_trace,
-            "tenant_skew": tenant_skew_trace, "churn": churn_trace}
+            "tenant_skew": tenant_skew_trace, "churn": churn_trace,
+            "filtered": filtered_trace}
     if scenario not in gens:
         raise ValueError(f"unknown scenario {scenario!r}; "
                          f"choose from {sorted(gens)}")

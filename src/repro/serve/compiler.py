@@ -35,10 +35,17 @@ def ek_bucket(ek: int) -> int:
 @dataclass(frozen=True)
 class GroupKey:
     """Plan signature: query vid + sorted ((spec, ek bucket), ...) pairs.
-    An empty signature is the flat-scan fallback group for that vid."""
+    An empty signature is the flat-scan fallback group for that vid.
+
+    Filtered queries (DESIGN.md §12) additionally group by predicate and
+    access path: the keep bitmap is a shared (1, N) kernel operand per
+    launch, so a group must be predicate-uniform. Predicate AST nodes are
+    frozen/hashable, so they key directly."""
 
     vid: Vid
     signature: tuple  # tuple[(IndexSpec, int), ...]
+    pred: object = None          # query.predicate (None = unfiltered)
+    access: str | None = None    # plan.access_path for filtered groups
 
 
 @dataclass
@@ -82,8 +89,11 @@ class PlanGroup:
 def _signature(query: Query, plan: QueryPlan) -> tuple[GroupKey, list[int]]:
     used = [(spec, int(ek)) for spec, ek in zip(plan.indexes, plan.eks) if ek > 0]
     used.sort(key=lambda se: (se[0].vid, se[0].kind))
+    pred = getattr(query, "predicate", None)
+    access = plan.access_path if pred is not None else None
     key = GroupKey(vid=query.vid,
-                   signature=tuple((spec, ek_bucket(ek)) for spec, ek in used))
+                   signature=tuple((spec, ek_bucket(ek)) for spec, ek in used),
+                   pred=pred, access=access)
     return key, [ek for _, ek in used]
 
 

@@ -48,12 +48,34 @@ reference path; both return identical (values, ids).
     delta segment — physically holds it;
   - recall ground truth comes from ``view.ground_truth`` (exact top-k over
     live rows), not the frozen base.
+
+Filtered search (DESIGN.md §12): with an ``AttributeStore`` attached
+(``attach_filters``), queries may carry a predicate and their plan an
+access path —
+
+  - ``pre``    gather exactly the matching live rows and brute-force score
+               only those (one dispatch per side; wins at low selectivity);
+  - ``masked`` full scan with the predicate's keep bitmap composed into
+               the kernels' row masks (keep ∧ ¬dead in-register on the
+               streaming path);
+  - ``post``   the normal index probe at 1/selectivity-inflated eks with
+               non-matching candidates score-killed before selection (flat
+               specs push the keep mask into the kernel instead — exact at
+               any depth, no escalation loop).
+
+All three return the exact filtered top-k whenever their candidate
+generation is exact (flat/pre always; ANN kinds at exhaustive depth),
+matching the unfiltered contract. Predicates with ZERO live matches
+return empty results without dispatching any kernel (an all-masked launch
+would surface NEG_INF sentinels as hits). Plan groups are
+predicate-uniform (``GroupKey.pred``), so the keep bitmap is one shared
+(1, N) operand per launch.
 """
 from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -115,6 +137,40 @@ class DispatchCounters:
                 "rerank": self.rerank, "fallback": self.fallback}
 
 
+@dataclass
+class _FilterState:
+    """Evaluated predicate bitmaps for the CURRENT table state, cached per
+    (predicate, attribute version, table version, base rows). ``base_keep``
+    / ``delta_keep`` are host bool bitmaps over base / delta PHYSICAL rows
+    (the delta bitmap follows the table's global delta-row order, which
+    every vid's delta column shares); device copies are built lazily per
+    padded length for the kernel keep-mask operands."""
+
+    pred: object
+    base_keep: np.ndarray
+    delta_keep: np.ndarray | None
+    n_match: int        # live rows matching (base + delta)
+    n_match_base: int   # live BASE rows matching (mesh over-fetch sizing)
+    _dev: dict = field(default_factory=dict)
+
+    def base_keep_dev(self, padded_n: int) -> jnp.ndarray:
+        key = ("base", padded_n)
+        if key not in self._dev:
+            m = np.zeros(padded_n, dtype=bool)
+            m[: self.base_keep.shape[0]] = self.base_keep
+            self._dev[key] = jnp.asarray(m)
+        return self._dev[key]
+
+    def delta_keep_dev(self, padded_n: int) -> jnp.ndarray:
+        key = ("delta", padded_n)
+        if key not in self._dev:
+            m = np.zeros(padded_n, dtype=bool)
+            if self.delta_keep is not None:
+                m[: self.delta_keep.shape[0]] = self.delta_keep
+            self._dev[key] = jnp.asarray(m)
+        return self._dev[key]
+
+
 @jax.jit
 def _gather_scores(data: jnp.ndarray, rows: jnp.ndarray, qmat: jnp.ndarray):
     """Per-query gathered-row scoring: (N,d), (B,R) int32, (B,d) -> (B,R)."""
@@ -153,6 +209,11 @@ class BatchEngine:
         self.counters = DispatchCounters()
         self.mview = None  # repro.ingest.MutationView when mutations flow
         self._dist_steps: dict[tuple, object] = {}
+        # filtered search (attach_filters): attribute store + optional
+        # selectivity estimator, and the per-predicate bitmap cache
+        self.attrs = None
+        self.selest = None
+        self._filter_cache: dict[tuple, _FilterState] = {}
 
     # ---- public API -------------------------------------------------------
 
@@ -173,6 +234,20 @@ class BatchEngine:
             self.db = db
         if cstore is not None or db is not None:
             self._dist_steps.clear()
+
+    def attach_filters(self, attrs, selectivity=None) -> None:
+        """Attach a ``repro.filter.AttributeStore`` (and optionally a
+        ``SelectivityEstimator``): queries carrying a ``predicate`` are
+        served over exactly the live rows matching it. Without this call a
+        filtered query raises — predicates are never silently ignored."""
+        self.attrs = attrs
+        self.selest = selectivity
+        self._filter_cache.clear()
+
+    def detach_filters(self) -> None:
+        self.attrs = None
+        self.selest = None
+        self._filter_cache.clear()
 
     def attach_mutations(self, view) -> None:
         """Attach a ``repro.ingest.MutationView``: scans mask tombstoned
@@ -264,7 +339,10 @@ class BatchEngine:
             for item, ids, cost, nd, eks, gt in zip(
                     group.items, ids_list, costs, ndists, eks_maps, gts):
                 gtset = set(int(i) for i in gt)
-                rec = len(gtset & set(int(i) for i in ids)) / max(len(gtset), 1)
+                if gtset:
+                    rec = len(gtset & set(int(i) for i in ids)) / len(gtset)
+                else:  # empty oracle (zero-match predicate): empty is exact
+                    rec = 1.0 if len(ids) == 0 else 0.0
                 out[item.pos] = ExecutionMetrics(
                     item.query.qid, cost, wall, rec, nd, eks, ids=ids)
         return out
@@ -291,6 +369,8 @@ class BatchEngine:
     # ---- group execution --------------------------------------------------
 
     def _run_group(self, group: PlanGroup, sq: dict | None = None):
+        if group.key.pred is not None:
+            return self._run_group_filtered(group, sq=sq)
         specs, buckets = group.specs, group.buckets
         items = group.items
         B = len(items)
@@ -421,6 +501,309 @@ class BatchEngine:
             ndists[i] += total_ek
         return out_ids, costs, ndists, eks_maps
 
+    # ---- filtered execution (DESIGN.md §12) -------------------------------
+
+    def _filter_state(self, pred) -> _FilterState:
+        """Evaluate (or fetch) the predicate's bitmaps for the current
+        table state. Keyed by (pred, attribute version, table version,
+        base rows), so attribute writes, mutations, compaction rebases and
+        store swaps all invalidate naturally."""
+        attrs = self.attrs
+        mv = self._mv()
+        tver = -1 if mv is None else mv.table.version
+        key = (pred, attrs.version, tver, self.db.n_rows)
+        st = self._filter_cache.get(key)
+        if st is not None:
+            return st
+        if mv is None:
+            base_keep = attrs.bitmap(pred, np.arange(self.db.n_rows))
+            delta_keep = None
+            n_match_base = int(base_keep.sum())
+            n_match = n_match_base
+        else:
+            t = mv.table
+            base_keep = attrs.bitmap(pred, t.base_ids)
+            n_match_base = int((base_keep & t.base_alive).sum())
+            n_match = n_match_base
+            delta_keep = None
+            if t.n_delta:
+                delta_keep = attrs.bitmap(pred, t.delta_ids_arr())
+                n_match += int((delta_keep & t.delta_alive_arr()).sum())
+        st = _FilterState(pred, base_keep, delta_keep, n_match, n_match_base)
+        if len(self._filter_cache) > 128:
+            self._filter_cache.clear()
+        self._filter_cache[key] = st
+        return st
+
+    def _run_group_filtered(self, group: PlanGroup, sq: dict | None = None):
+        if self.attrs is None:
+            raise ValueError(
+                "query carries a predicate but no AttributeStore is "
+                "attached (BatchEngine.attach_filters) — refusing to "
+                "silently ignore the filter")
+        fs = self._filter_state(group.key.pred)
+        B = len(group.items)
+        if fs.n_match == 0:
+            # zero-match guard: empty top-k, NO kernel dispatch (an
+            # all-masked launch surfaces NEG_INF sentinels as hits).
+            # Covers every access path and index kind — the bitmap is the
+            # only work done.
+            return ([np.empty(0, np.int64) for _ in range(B)],
+                    [0.0] * B, [0] * B, [{} for _ in range(B)])
+        if group.key.access == "pre":
+            return self._prefilter_group(group, fs, sq=sq)
+        return self._masked_group(group, fs, sq=sq)
+
+    def _prefilter_group(self, group: PlanGroup, fs: _FilterState,
+                         sq: dict | None = None):
+        """Pre-filter access path: gather exactly the matching LIVE rows
+        (base side + delta side) and brute-force score only those — cost
+        dim(q)·|match|, no index involved. Exact by construction: the
+        candidate set IS the filtered row set."""
+        items = group.items
+        B = len(items)
+        costs = [0.0] * B
+        ndists = [0] * B
+        eks_maps: list[dict] = [{} for _ in range(B)]
+        vid = group.key.vid
+        col = self.cstore.device(vid)
+        qmat = self._staged_qmat(sq, -1, col)
+        if qmat is None:
+            qmat = col.pad_queries(
+                np.stack([it.query.concat() for it in items]))
+        mv = self._mv()
+        parts_s: list[np.ndarray] = []
+        parts_ids: list[np.ndarray] = []
+        if mv is None:
+            bphys = np.nonzero(fs.base_keep)[0]
+            if bphys.size:
+                sub = col.data[jnp.asarray(bphys.astype(np.int32))]
+                parts_s.append(np.asarray(self._batched_scores(qmat, sub)))
+                parts_ids.append(bphys.astype(np.int64))
+                self.counters.scan += 1
+        else:
+            t = mv.table
+            bphys = np.nonzero(fs.base_keep & t.base_alive)[0]
+            if bphys.size:
+                sub = col.data[jnp.asarray(bphys.astype(np.int32))]
+                parts_s.append(np.asarray(self._batched_scores(qmat, sub)))
+                parts_ids.append(mv.translate(bphys))
+                self.counters.scan += 1
+            if fs.delta_keep is not None:
+                dphys = np.nonzero(fs.delta_keep & t.delta_alive_arr())[0]
+                if dphys.size:
+                    dcol = mv.delta(vid)
+                    qd = dcol.col.pad_queries(
+                        np.stack([it.query.concat() for it in items]))
+                    sub = dcol.col.data[jnp.asarray(dphys.astype(np.int32))]
+                    parts_s.append(np.asarray(self._batched_scores(qd, sub)))
+                    parts_ids.append(dcol.ids[dphys])
+                    self.counters.delta += 1
+        scores = np.concatenate(parts_s, axis=1)
+        stable = np.concatenate(parts_ids)
+        m = int(stable.shape[0])
+        out_ids = []
+        for i, it in enumerate(items):
+            s = scores[i]
+            order = np.lexsort((stable, -s))[: min(it.query.k, m)]
+            out_ids.append(stable[order].astype(np.int64))
+            costs[i] = float(it.query.dim() * m)
+            ndists[i] = m
+        return out_ids, costs, ndists, eks_maps
+
+    def _masked_group(self, group: PlanGroup, fs: _FilterState,
+                      sq: dict | None = None):
+        """Masked / post-filter access paths. Flat scans (including the
+        no-spec fallback) push the keep bitmap into the kernel row mask
+        (keep ∧ ¬dead in-register), so they are exact at any depth ≥ k —
+        the "post" access differs only in planned dispatch depth. IVF
+        probes score-kill non-matching rows before selection; graph walks
+        filter their results; delta segments are keep-masked the same way
+        as the base. Under a mesh the distributed step cannot mask, so
+        scans over-fetch past the non-matching rows and score-kill on
+        host."""
+        specs, buckets = group.specs, group.buckets
+        items = group.items
+        B = len(items)
+        costs = [0.0] * B
+        ndists = [0] * B
+        eks_maps: list[dict] = [{} for _ in range(B)]
+        mv = self._mv()
+
+        if not specs:  # keep-masked flat fallback scan
+            col = self.cstore.device(group.key.vid)
+            qmat = self._staged_qmat(sq, -1, col)
+            if qmat is None:
+                qmat = col.pad_queries(
+                    np.stack([it.query.concat() for it in items]))
+            if mv is None:
+                s, ids = self._filtered_flat_scan(
+                    col, qmat, min(group.max_k, col.n_rows), fs)
+                out_ids = []
+                for i, it in enumerate(items):
+                    out_ids.append(self._merge_scored(
+                        s[i], ids[i].astype(np.int64), None, None,
+                        min(it.query.k, fs.n_match)))
+                    costs[i] = float(it.query.dim() * col.n_rows)
+                    ndists[i] = col.n_rows
+                return out_ids, costs, ndists, eks_maps
+            if self.streaming and self.mesh is None:
+                bs, bids, n_delta = self._merged_scan_mv(
+                    mv, col, qmat, group.key.vid, group.max_k, fstate=fs)
+                ds, dids = None, None
+            else:
+                bs, bids = self._base_scan_mv(
+                    mv, col, qmat, min(group.max_k, col.n_rows), fstate=fs)
+                ds, dids, n_delta = self._delta_scan(
+                    mv, group.key.vid, items, group.max_k, fstate=fs)
+            out_ids = []
+            for i, it in enumerate(items):
+                k_i = min(it.query.k, fs.n_match)
+                out_ids.append(self._merge_scored(
+                    bs[i], bids[i],
+                    None if ds is None else ds[i],
+                    None if ds is None else dids[i], k_i))
+                costs[i] = float(it.query.dim() * (col.n_rows + n_delta))
+                ndists[i] = col.n_rows + n_delta
+            return out_ids, costs, ndists, eks_maps
+
+        cand: list[list[np.ndarray]] = [[np.empty(0, np.int64)] * len(specs)
+                                        for _ in range(B)]
+        for j, (spec, bucket) in enumerate(zip(specs, buckets)):
+            kind = spec.kind if self.store is not None else "flat"
+            for i, it in enumerate(items):
+                eks_maps[i][spec.name] = it.eks[j]
+            # every branch yields best-first (stable ids, scores) of
+            # MATCHING candidates only; the delta merge finalizes cand
+            scored: list = [None] * B
+            delta_merged = False
+            if kind == "ivf":
+                self._ivf_scan(group, spec, j, cand, costs, ndists,
+                               mv=mv, scored=scored, sq=sq, fstate=fs)
+            elif kind == "flat":
+                col = self.cstore.device(spec.vid)
+                qmat = self._staged_qmat(sq, j, col)
+                if qmat is None:
+                    qmat = col.pad_queries(
+                        np.stack([it.query.concat(spec.vid)
+                                  for it in items]))
+                if mv is None:
+                    s, ids = self._filtered_flat_scan(
+                        col, qmat, min(bucket, col.n_rows), fs)
+                    for i, it in enumerate(items):
+                        scored[i] = (ids[i].astype(np.int64), s[i])
+                        costs[i] += float(col.dim * col.n_rows)
+                        ndists[i] += col.n_rows
+                elif self.streaming and self.mesh is None:
+                    s, stable, n_dj = self._merged_scan_mv(
+                        mv, col, qmat, spec.vid, bucket, fstate=fs)
+                    for i, it in enumerate(items):
+                        scored[i] = (stable[i], s[i])
+                        costs[i] += float(col.dim * (col.n_rows + n_dj))
+                        ndists[i] += col.n_rows + n_dj
+                    delta_merged = True
+                else:
+                    s, stable = self._base_scan_mv(
+                        mv, col, qmat, min(bucket, col.n_rows), fstate=fs)
+                    for i, it in enumerate(items):
+                        scored[i] = (stable[i], s[i])
+                        costs[i] += float(col.dim * col.n_rows)
+                        ndists[i] += col.n_rows
+            else:  # graph kinds: walk, then drop non-matching/dead results
+                idx = self.store.get(spec)
+                for i, it in enumerate(items):
+                    res = idx.search(it.query.concat(spec.vid), it.eks[j])
+                    ok = fs.base_keep[res.ids]
+                    if mv is not None:
+                        ok = ok & mv.table.base_alive[res.ids]
+                    rows = res.ids[ok]
+                    stable = (mv.translate(rows) if mv is not None
+                              else rows.astype(np.int64))
+                    scored[i] = (stable, res.scores[ok])
+                    costs[i] += float(idx.dim * res.num_dist)
+                    ndists[i] += res.num_dist
+                    self.counters.fallback += 1
+            if delta_merged:  # one-launch scan already holds the delta
+                for i, it in enumerate(items):
+                    sids, s = scored[i]
+                    cand[i][j] = self._merge_scored(s, sids, None, None,
+                                                    it.eks[j])
+            else:
+                ds, dids, n_delta = (self._delta_scan(
+                    mv, spec.vid, items, bucket, fstate=fs)
+                    if mv is not None else (None, None, 0))
+                for i, it in enumerate(items):
+                    sids, s = scored[i]
+                    cand[i][j] = self._merge_scored(
+                        s, sids, None if ds is None else ds[i],
+                        None if ds is None else dids[i], it.eks[j])
+                    if n_delta:
+                        d = self.db.dim(spec.vid)
+                        costs[i] += float(d * n_delta)
+                        ndists[i] += n_delta
+
+        if group.single_exact:
+            out_ids = [cand[i][0][: items[i].query.k] for i in range(B)]
+            return out_ids, costs, ndists, eks_maps
+
+        out_ids = self._rerank(group, cand, mv=mv, sq=sq)
+        for i, it in enumerate(items):
+            total_ek = int(sum(it.eks))
+            costs[i] += float(it.query.dim() * total_ek)
+            ndists[i] += total_ek
+        return out_ids, costs, ndists, eks_maps
+
+    def _filtered_flat_scan(self, col: DeviceColumn, qmat: jnp.ndarray,
+                            depth: int, fs: _FilterState,
+                            dead_mask=None) -> tuple[np.ndarray, np.ndarray]:
+        """Keep-masked flat scan over an unmutated base: kernel paths get
+        the device keep bitmap; the distributed step cannot mask, so the
+        mesh path over-fetches past the non-matching rows and score-kills
+        them on host. Returns (scores, physical ids), best-first."""
+        if self.mesh is None:
+            return self._flat_scan_scored(
+                col, qmat, depth, dead_mask=dead_mask,
+                keep_mask=fs.base_keep_dev(int(col.data.shape[0])))
+        n_bad = col.n_rows - fs.n_match_base
+        k_eff = min(ek_bucket(depth + n_bad), col.n_rows)
+        s, ids = self._flat_scan_scored(col, qmat, k_eff)
+        s = np.where(fs.base_keep[ids], s, NEG_INF).astype(np.float32)
+        return s, ids
+
+    def _filtered_ground_truth(self, query: Query, pred) -> np.ndarray:
+        """Brute-force oracle: exact top-k over exactly the live rows
+        matching the predicate (canonical score desc, stable id asc
+        order) — the bit-identity target for every access path."""
+        fs = self._filter_state(pred)
+        mv = self._mv()
+        qvec = query.concat()
+        if mv is None:
+            data = self.cstore.host(query.vid)
+            rows = np.nonzero(fs.base_keep)[0]
+            s = data[rows] @ qvec
+            order = np.lexsort((rows, -s))
+            return rows[order][: min(query.k, rows.size)].astype(np.int64)
+        t = mv.table
+        ids_parts: list[np.ndarray] = []
+        s_parts: list[np.ndarray] = []
+        bphys = np.nonzero(fs.base_keep & t.base_alive)[0]
+        if bphys.size:
+            base = t.base.concat(query.vid)
+            ids_parts.append(mv.translate(bphys))
+            s_parts.append(base[bphys] @ qvec)
+        if fs.delta_keep is not None:
+            dphys = np.nonzero(fs.delta_keep & t.delta_alive_arr())[0]
+            if dphys.size:
+                dmat = t.delta_concat(query.vid)
+                ids_parts.append(t.delta_ids_arr()[dphys])
+                s_parts.append(dmat[dphys] @ qvec)
+        if not ids_parts:
+            return np.empty(0, np.int64)
+        ids = np.concatenate(ids_parts)
+        s = np.concatenate(s_parts)
+        order = np.lexsort((ids, -s))
+        return ids[order][: min(query.k, ids.size)].astype(np.int64)
+
     def _batched_scores(self, qmat: jnp.ndarray, sub: jnp.ndarray) -> jnp.ndarray:
         """One batched scoring dispatch. On TPU this is the Pallas MXU
         kernel; under interpret mode (CPU container) the same contraction
@@ -437,14 +820,20 @@ class BatchEngine:
         return self._flat_scan_scored(col, qmat, k)[1]
 
     def _flat_scan_scored(self, col: DeviceColumn, qmat: jnp.ndarray, k: int,
-                          dead_mask=None, counter: str = "scan"
+                          dead_mask=None, keep_mask=None,
+                          counter: str = "scan"
                           ) -> tuple[np.ndarray, np.ndarray]:
         """One batched flat dispatch -> (scores, ids), best-first. The
-        tombstone ``dead_mask`` is threaded into ``fused_scan`` (masked rows
-        come back at -inf and are dropped by the merge); the distributed
-        step has no mask argument, so mesh callers over-fetch instead."""
+        tombstone ``dead_mask`` and the predicate ``keep_mask`` are threaded
+        into the kernel row mask (masked rows come back at -inf and are
+        dropped by the merge); the distributed step has no mask argument,
+        so mesh callers over-fetch instead."""
         setattr(self.counters, counter, getattr(self.counters, counter) + 1)
         if self.mesh is not None:
+            if keep_mask is not None:
+                raise RuntimeError(
+                    "distributed scan cannot mask: mesh callers must "
+                    "over-fetch and score-kill on host, not pass keep_mask")
             key = (k, col.n_rows)
             if key not in self._dist_steps:
                 from repro.search.distributed import make_search_step
@@ -454,59 +843,77 @@ class BatchEngine:
         elif self.streaming:
             vals, ids = streaming_fused_scan(
                 qmat, col.data, k=min(k, col.n_rows), valid_n=col.n_rows,
-                dead_mask=dead_mask, interpret=self.interpret)
+                dead_mask=dead_mask, keep_mask=keep_mask,
+                interpret=self.interpret)
         else:
             vals, ids = fused_scan(qmat, col.data, k=k, valid_n=col.n_rows,
-                                   dead_mask=dead_mask,
+                                   dead_mask=dead_mask, keep_mask=keep_mask,
                                    interpret=self.interpret)
         return np.asarray(vals), np.asarray(ids)
 
     # ---- mutation-aware scanning (repro.ingest) ---------------------------
 
     def _base_scan_mv(self, mv, col: DeviceColumn, qmat: jnp.ndarray,
-                      depth: int) -> tuple[np.ndarray, np.ndarray]:
+                      depth: int, fstate: _FilterState | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
         """Masked base scan under mutations -> (scores, STABLE ids). Under
         a mesh the distributed step cannot mask, so the scan over-fetches
-        ``depth + n_dead`` (bucketed to bound recompiles) and tombstones
-        are score-killed on host — both paths return the exact alive
-        top-``depth``."""
+        past the bad rows (tombstones ∪ non-matching; bucketed to bound
+        recompiles) and score-kills them on host — both paths return the
+        exact alive (and matching) top-``depth``."""
         dead = mv.base_dead_mask(int(col.data.shape[0]))
-        if self.mesh is None or dead is None:
+        if self.mesh is None or (dead is None and fstate is None):
+            keep = (None if fstate is None
+                    else fstate.base_keep_dev(int(col.data.shape[0])))
             s, ids = self._flat_scan_scored(col, qmat,
                                             min(depth, col.n_rows),
-                                            dead_mask=dead)
+                                            dead_mask=dead, keep_mask=keep)
         else:
-            k_eff = min(ek_bucket(depth + mv.n_dead_base), col.n_rows)
+            n_bad = (mv.n_dead_base if fstate is None
+                     else col.n_rows - fstate.n_match_base)
+            k_eff = min(ek_bucket(depth + n_bad), col.n_rows)
             s, ids = self._flat_scan_scored(col, qmat, k_eff)
-            alive = mv.table.base_alive[ids]
-            s = np.where(alive, s, NEG_INF).astype(np.float32)
+            ok = mv.table.base_alive[ids]
+            if fstate is not None:
+                ok = ok & fstate.base_keep[ids]
+            s = np.where(ok, s, NEG_INF).astype(np.float32)
         return s, mv.translate(ids)
 
-    def _delta_scan(self, mv, vid, items, depth: int):
+    def _delta_scan(self, mv, vid, items, depth: int,
+                    fstate: _FilterState | None = None):
         """Brute-force delta-segment scan for one (group, index): one
         batched dispatch over the padded delta matrix -> (scores, STABLE
         ids, n_delta_rows); (None, None, 0) when the table has no delta.
-        Under a mesh the dispatch cannot mask, so tombstoned delta rows
-        are score-killed on host instead (delta arrays are small)."""
+        Under a mesh the dispatch cannot mask, so tombstoned (and
+        non-matching) delta rows are score-killed on host instead (delta
+        arrays are small)."""
         dcol = mv.delta(vid)
         if dcol is None:
             return None, None, 0
         qmat = dcol.col.pad_queries(
             np.stack([it.query.concat(vid) for it in items]))
+        host_kill = self.mesh is not None and (not dcol.alive.all()
+                                               or fstate is not None)
         k_eff = min(depth, dcol.n_rows)
-        if self.mesh is not None and not dcol.alive.all():
-            # the distributed step cannot mask: over-fetch past the dead
+        if host_kill:
+            # the distributed step cannot mask: over-fetch past the bad
             # rows, then score-kill them on host (delta arrays are small)
-            k_eff = min(depth + int((~dcol.alive).sum()), dcol.n_rows)
+            k_eff = dcol.n_rows
+        keep = None
+        if fstate is not None and self.mesh is None:
+            keep = fstate.delta_keep_dev(int(dcol.col.data.shape[0]))
         s, ids = self._flat_scan_scored(dcol.col, qmat, k_eff,
                                         dead_mask=dcol.dead_mask,
-                                        counter="delta")
-        if self.mesh is not None and not dcol.alive.all():
-            s = np.where(dcol.alive[ids], s, NEG_INF).astype(np.float32)
+                                        keep_mask=keep, counter="delta")
+        if host_kill:
+            ok = dcol.alive[ids]
+            if fstate is not None:
+                ok = ok & fstate.delta_keep[ids]
+            s = np.where(ok, s, NEG_INF).astype(np.float32)
         return s, dcol.ids[ids], dcol.n_rows
 
     def _merged_scan_mv(self, mv, col: DeviceColumn, qmat: jnp.ndarray,
-                        vid, depth: int):
+                        vid, depth: int, fstate: _FilterState | None = None):
         """ONE ``streaming_fused_scan`` launch over base + delta: the delta
         segment rides the kernel's second row source, tombstones on both
         sides are masked in-register, and the merged best-first candidates
@@ -519,17 +926,22 @@ class BatchEngine:
         configurations keep the two-dispatch scan-then-merge."""
         dcol = mv.delta(vid)
         dead = mv.base_dead_mask(int(col.data.shape[0]))
+        bkeep = (None if fstate is None
+                 else fstate.base_keep_dev(int(col.data.shape[0])))
         if dcol is None:  # no delta rows: plain masked base scan
             s, ids = self._flat_scan_scored(col, qmat,
                                             min(depth, col.n_rows),
-                                            dead_mask=dead)
+                                            dead_mask=dead, keep_mask=bkeep)
             return s, mv.translate(ids), 0
+        dkeep = (None if fstate is None
+                 else fstate.delta_keep_dev(int(dcol.col.data.shape[0])))
         self.counters.scan += 1
         k_eff = min(depth, col.n_rows + dcol.n_rows)
         vals, ids = streaming_fused_scan(
             qmat, col.data, k=k_eff, valid_n=col.n_rows, dead_mask=dead,
             delta=dcol.col.data, delta_valid_n=dcol.n_rows,
-            delta_dead_mask=dcol.dead_mask, interpret=self.interpret)
+            delta_dead_mask=dcol.dead_mask, keep_mask=bkeep,
+            delta_keep_mask=dkeep, interpret=self.interpret)
         vals = np.asarray(vals)
         ids = np.asarray(ids)
         # combined-physical ids -> stable: delta rows are offset by the
@@ -558,14 +970,16 @@ class BatchEngine:
         return ids[order].astype(np.int64)
 
     def _ivf_scan(self, group: PlanGroup, spec, j: int, cand, costs, ndists,
-                  mv=None, scored=None, sq: dict | None = None):
+                  mv=None, scored=None, sq: dict | None = None,
+                  fstate: _FilterState | None = None):
         """Batched IVF probe: one centroid-scoring dispatch for the whole
         group, then one gathered-row scoring dispatch over the padded probe
         union. Per-query nprobe / top-ek use each query's ACTUAL ek so the
         results match ``IVFFlatIndex.search`` exactly. Under mutations
         (``mv``), tombstoned rows are score-killed before selection and the
         surviving candidates land in ``scored`` as (stable ids, scores) for
-        the delta merge."""
+        the delta merge; under a predicate (``fstate``) non-matching probe
+        rows are score-killed the same way."""
         idx = self.store.get(spec)
         items = group.items
         col = self.cstore.device(spec.vid)
@@ -605,16 +1019,24 @@ class BatchEngine:
                     cand[i][j] = np.empty(0, np.int64)
                 continue
             s = scores[i, : rows.shape[0]]
+            ok = None
             if mv is not None:  # tombstones: dead probe rows never rank
-                s = np.where(mv.table.base_alive[rows], s,
-                             NEG_INF).astype(np.float32)
+                ok = mv.table.base_alive[rows]
+            if fstate is not None:  # predicate: non-matching rows neither
+                keep_rows = fstate.base_keep[rows]
+                ok = keep_rows if ok is None else ok & keep_rows
+            if ok is not None:
+                s = np.where(ok, s, NEG_INF).astype(np.float32)
             ek = min(it.eks[j], rows.shape[0])
             part = np.argpartition(-s, ek - 1)[:ek]
             order = np.argsort(-s[part], kind="stable")
             sel = part[order]
             if scored is not None:
                 keep = s[sel] > _DEAD_CUT
-                scored[i] = (mv.translate(rows[sel][keep]), s[sel][keep])
+                srows = rows[sel][keep]
+                stable = (mv.translate(srows) if mv is not None
+                          else srows.astype(np.int64))
+                scored[i] = (stable, s[sel][keep])
             else:
                 cand[i][j] = rows[sel]
 
@@ -688,6 +1110,11 @@ class BatchEngine:
             None if gt_cache is None else gt_cache.get(it.query.qid)
             for it in items]
         if missing:
+            if group.key.pred is not None:  # filtered oracle, stable ids
+                for i in missing:
+                    gts[i] = self._filtered_ground_truth(items[i].query,
+                                                         group.key.pred)
+                return gts
             mv = self._mv()
             if mv is not None:  # oracle over the LIVE table, stable ids
                 for i in missing:

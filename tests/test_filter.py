@@ -1,0 +1,547 @@
+"""Filtered multi-vector search tests (DESIGN.md §12).
+
+The acceptance property: for every (access path × index kind × selectivity
+× mutation state) cell, the filtered top-k is BIT-IDENTICAL to a
+brute-force oracle over exactly the live rows matching the predicate —
+canonical (score desc, stable id asc) order. Exactness caveat mirrors
+``test_ingest``: flat paths (pre-filter gather, keep-masked scan) are
+exact at any depth >= k; ANN post-filter probes are only deterministic at
+exhaustive depth (ek = n_live), so the grid runs them there. The fast
+lane keeps smoke cells; the CI ``kernels`` job runs the whole file with
+``-m ""``.
+"""
+from dataclasses import replace as dc_replace
+
+import numpy as np
+import pytest
+
+from repro.core.tuner import Mint, execute_plan
+from repro.core.types import Constraints, IndexSpec, QueryPlan, Workload
+from repro.data.vectors import make_database, make_queries
+from repro.filter import (And, AttributeStore, Eq, FieldSpec, In, Not, Or,
+                          Range, SelectivityEstimator, describe,
+                          inflate_eks, prefilter_cost, text_hash)
+from repro.filter.attributes import NUMERIC, TAG, TEXTHASH, synth_attributes
+from repro.index.registry import IndexStore
+from repro.ingest import (DeleteBatch, IngestRuntime, InsertBatch,
+                          MutableTable, MutationView, UpsertBatch)
+from repro.launch.roofline import modeled_scan_bytes
+from repro.online.plancache import PlanCache
+from repro.online.runtime import RuntimeConfig
+from repro.online.trace import TimedQuery, make_trace, row_batch
+from repro.serve.engine import BatchEngine
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - hypothesis is in requirements-dev
+    HAVE_HYP = False
+
+K = 8
+COLS = [("a", 16), ("b", 24)]
+SELS = (0.0, 0.01, 0.1, 0.5, 1.0)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(240, COLS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def attrs(db):
+    return synth_attributes(db.n_rows, seed=3)
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    return make_queries(db, [(0, 1), (0,), (1,)], k=K, seed=7)
+
+
+def quantile_pred(attrs, n_rows, sel, lo_q=0.25):
+    vals = np.sort(attrs.take("score", np.arange(n_rows)))
+    if sel <= 0.0:
+        return Range("score", lo=float(vals[-1]) + 1.0,
+                     hi=float(vals[-1]) + 2.0)
+    if sel >= 1.0:
+        return Range("score", lo=float(vals[0]) - 1.0,
+                     hi=float(vals[-1]) + 1.0)
+    lo_q = min(lo_q, 1.0 - sel)
+    return Range("score", lo=float(np.quantile(vals, lo_q)),
+                 hi=float(np.quantile(vals, lo_q + sel)))
+
+
+def filtered_oracle(attrs, pred, q, db=None, table=None):
+    """Independent numpy oracle: exact filtered top-k over live rows."""
+    qvec = q.concat()
+    if table is None:
+        keep = attrs.bitmap(pred, np.arange(db.n_rows))
+        rows = np.nonzero(keep)[0]
+        s = db.concat(q.vid)[rows] @ qvec
+        ids = rows.astype(np.int64)
+    else:
+        t = table
+        bp = np.nonzero(attrs.bitmap(pred, t.base_ids) & t.base_alive)[0]
+        parts_s = [t.base.concat(q.vid)[bp] @ qvec]
+        parts_i = [t.base_ids[bp]]
+        if t.n_delta:
+            keep_d = (attrs.bitmap(pred, t.delta_ids_arr())
+                      & t.delta_alive_arr())
+            dp = np.nonzero(keep_d)[0]
+            parts_s.append(t.delta_concat(q.vid)[dp] @ qvec)
+            parts_i.append(t.delta_ids_arr()[dp])
+        s = np.concatenate(parts_s)
+        ids = np.concatenate(parts_i)
+    order = np.lexsort((ids, -s))
+    return ids[order][: min(q.k, ids.size)].astype(np.int64)
+
+
+def _churn(db, attrs, seed=1, n_insert=30, n_delete=40, n_upsert=6):
+    """Churned table whose inserted rows carry attributes."""
+    t = MutableTable(db)
+    rng = np.random.default_rng(seed)
+    _, ids = t.apply(InsertBatch(row_batch(db, rng, n_insert)))
+    attrs.put(ids, {"score": rng.random(n_insert).astype(np.float32),
+                    "category": [f"c{i % 5}" for i in range(n_insert)]})
+    t.apply(DeleteBatch(rng.choice(t.live_ids(), size=n_delete,
+                                   replace=False)))
+    if n_upsert:
+        up = rng.choice(t.live_ids(), size=n_upsert, replace=False)
+        t.apply(UpsertBatch(up, row_batch(db, rng, n_upsert)))
+    return t
+
+
+# ---- predicate AST --------------------------------------------------------
+
+
+def test_predicates_hashable_and_normalized():
+    p1 = And(Eq("category", "c1"), Or(Range("score", lo=0.2, hi=0.8),
+                                      Not(In("source", ["s0", "s1"]))))
+    p2 = And(Eq("category", "c1"), Or(Range("score", lo=0.2, hi=0.8),
+                                      Not(In("source", ("s0", "s1")))))
+    assert p1 == p2 and hash(p1) == hash(p2)  # list/tuple values normalize
+    assert {p1: 1}[p2] == 1                   # usable as a dict/group key
+    assert "category" in p1.fields() and "score" in p1.fields()
+    assert "category" in describe(p1)
+
+
+def test_empty_and_or_rejected(db, attrs):
+    with pytest.raises(ValueError):
+        attrs.bitmap(And(), np.arange(4))
+    with pytest.raises(ValueError):
+        attrs.bitmap(Or(), np.arange(4))
+
+
+# ---- attribute store ------------------------------------------------------
+
+
+def test_store_put_take_and_missing_semantics():
+    store = AttributeStore([FieldSpec("tag", TAG), FieldSpec("num", NUMERIC),
+                            FieldSpec("txt", TEXTHASH)])
+    store.put(np.array([0, 2, 5]), {"tag": ["a", "b", "a"],
+                                    "num": [0.1, 0.7, 0.3],
+                                    "txt": ["x", "y", "x"]})
+    ids = np.arange(7)
+    # missing rows (1, 3, 4, 6) never match any positive predicate ...
+    np.testing.assert_array_equal(
+        store.bitmap(Eq("tag", "a"), ids),
+        [True, False, False, False, False, True, False])
+    np.testing.assert_array_equal(
+        store.bitmap(Range("num", lo=0.0, hi=1.0), ids),
+        [True, False, True, False, False, True, False])
+    np.testing.assert_array_equal(
+        store.bitmap(Eq("txt", "x"), ids),
+        [True, False, False, False, False, True, False])
+    # ... and Not is a pure complement (missing rows DO match)
+    np.testing.assert_array_equal(
+        store.bitmap(Not(Eq("tag", "a")), ids),
+        [False, True, True, True, True, False, True])
+    # unknown tag value / unknown field
+    assert not store.bitmap(Eq("tag", "zzz"), ids).any()
+    with pytest.raises(KeyError):
+        store.bitmap(Eq("nope", 1), ids)
+    with pytest.raises(TypeError):  # Range over a non-numeric field
+        store.bitmap(Range("tag", lo=0, hi=1), ids)
+    # out-of-capacity ids read as missing
+    assert not store.bitmap(Eq("tag", "a"), np.array([100, 200])).any()
+
+
+def test_host_and_device_bitmaps_agree(db, attrs):
+    pred = And(Range("score", lo=0.1, hi=0.9),
+               Or(Eq("category", "c0"), Not(In("source", ["s0"]))))
+    ids = np.arange(db.n_rows)
+    host = attrs.bitmap(pred, ids)
+    dev = np.asarray(attrs.device_bitmap(pred, ids))
+    np.testing.assert_array_equal(host, dev.astype(bool))
+
+
+def test_text_hash_stable():
+    assert text_hash("hello") == text_hash("hello")
+    assert text_hash("hello") != text_hash("hellp")
+
+
+# ---- selectivity estimator -----------------------------------------------
+
+
+def test_selectivity_estimates_track_truth(db, attrs):
+    est = SelectivityEstimator(attrs, np.arange(db.n_rows), sample_size=200,
+                               seed=0)
+    for sel in (0.1, 0.5, 1.0):
+        pred = quantile_pred(attrs, db.n_rows, sel)
+        got = est.estimate(pred)
+        assert abs(got - sel) < 0.15, (sel, got)
+    zero = quantile_pred(attrs, db.n_rows, 0.0)
+    assert est.estimate(zero) < 0.05
+    assert est.estimate(None) == 1.0
+
+
+def test_estimator_cache_invalidates_on_attr_version(db, attrs_factory=None):
+    store = AttributeStore([FieldSpec("num", NUMERIC)])
+    store.put(np.arange(100), {"num": np.zeros(100, np.float32)})
+    est = SelectivityEstimator(store, np.arange(100), sample_size=100, seed=0)
+    pred = Range("num", lo=0.5, hi=1.5)
+    assert est.estimate(pred) < 0.05
+    store.put(np.arange(100), {"num": np.ones(100, np.float32)})
+    assert est.estimate(pred) > 0.9  # version bump dropped the cached value
+
+
+# ---- planner: selectivity-aware access paths ------------------------------
+
+
+@pytest.fixture(scope="module")
+def tuned(db, attrs, queries):
+    wl = Workload(queries=list(queries), probs=np.ones(len(queries)))
+    mint = Mint(db, index_kind="hnsw", seed=0, attributes=attrs)
+    cons = Constraints(theta_recall=0.9, theta_storage=3)
+    result = mint.tune(wl, cons)
+    return mint, cons, result
+
+
+def test_planner_access_path_tracks_selectivity(db, attrs, queries, tuned):
+    mint, cons, result = tuned
+    planner = mint.planner(cons)
+    q = queries[0]
+    low = dc_replace(q, predicate=quantile_pred(attrs, db.n_rows, 0.01))
+    high = dc_replace(q, predicate=quantile_pred(attrs, db.n_rows, 0.9))
+    p_low = planner.plan(low, result.configuration)
+    p_high = planner.plan(high, result.configuration)
+    assert p_low.access_path == "pre"
+    assert p_high.access_path in ("masked", "post")
+    assert 0.0 < p_low.selectivity < p_high.selectivity
+    assert "access=" in p_low.describe()
+    # unfiltered plans carry no access path and are untouched by the term
+    p_plain = planner.plan(q, result.configuration)
+    assert p_plain.access_path is None and p_plain.selectivity is None
+
+
+def test_planner_zero_selectivity_plans_no_index(db, attrs, queries, tuned):
+    mint, cons, result = tuned
+    planner = mint.planner(cons)
+    q = dc_replace(queries[0], predicate=quantile_pred(attrs, db.n_rows, 0.0))
+    p = planner.plan(q, result.configuration)
+    assert p.access_path == "pre" and p.selectivity < 0.05
+    assert p.indexes == [] and p.est_cost <= prefilter_cost(
+        q.dim(), db.n_rows, p.selectivity)
+
+
+def test_planner_force_access_and_post_inflation(db, attrs, queries, tuned):
+    mint, cons, result = tuned
+    planner = mint.planner(cons)
+    q = queries[0]
+    lo = dc_replace(q, predicate=quantile_pred(attrs, db.n_rows, 0.1))
+    hi = dc_replace(q, predicate=quantile_pred(attrs, db.n_rows, 0.8))
+    p_lo = planner.plan(lo, result.configuration, force_access="post")
+    p_hi = planner.plan(hi, result.configuration, force_access="post")
+    # lower selectivity -> deeper inflated eks and a costlier post plan
+    assert sum(p_lo.eks) >= sum(p_hi.eks)
+    assert p_lo.est_cost >= p_hi.est_cost
+    with pytest.raises(ValueError):
+        planner.plan(lo, [], force_access="post")  # no index -> unavailable
+
+
+def test_inflate_eks_caps_at_table_size():
+    assert inflate_eks([10, 0], 0.1, 500) == [100, 0]
+    assert inflate_eks([10], 0.001, 500) == [500]
+    assert inflate_eks([10], 1.0, 500) == [10]
+
+
+def test_execute_plan_rejects_filtered_queries(db, attrs, queries):
+    q = dc_replace(queries[0], predicate=Eq("category", "c0"))
+    store = IndexStore(db, seed=0)
+    plan = QueryPlan(q.qid, [], [], 1.0, 1.0)
+    with pytest.raises(NotImplementedError):
+        execute_plan(db, store, q, plan)
+
+
+# ---- engine parity grid ---------------------------------------------------
+
+
+def _grid_plans(q, kind, sel, n_live):
+    """One plan per access path; ANN post probes run exhaustively."""
+    ek = 40 if kind == "flat" else n_live
+    spec = IndexSpec(q.vid, kind)
+    return {
+        "pre": QueryPlan(q.qid, [], [], 1.0, 1.0,
+                         access_path="pre", selectivity=sel),
+        "masked": QueryPlan(q.qid, [], [], 1.0, 1.0,
+                            access_path="masked", selectivity=sel),
+        "post": QueryPlan(q.qid, [spec], [ek], 1.0, 1.0,
+                          access_path="post", selectivity=sel),
+    }
+
+
+def _run_grid(db, attrs, queries, kind, churned, sels, seed=1):
+    store = IndexStore(db, seed=0)
+    eng = BatchEngine(db, store=store)
+    eng.attach_filters(attrs)
+    table = None
+    if churned:
+        table = _churn(db, attrs, seed=seed)
+        eng.attach_mutations(MutationView(table))
+    n_live = db.n_rows if table is None else table.n_live
+    for sel in sels:
+        pred = quantile_pred(attrs, db.n_rows, sel)
+        for q in queries:
+            fq = dc_replace(q, predicate=pred)
+            gt = filtered_oracle(attrs, pred, fq, db=db, table=table)
+            for access, plan in _grid_plans(fq, kind, sel, n_live).items():
+                got = eng.search_batch([(fq, plan)])[0]
+                np.testing.assert_array_equal(
+                    np.asarray(got), gt,
+                    err_msg=f"kind={kind} access={access} sel={sel} "
+                            f"vid={q.vid} churned={churned}")
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf", "hnsw"])
+@pytest.mark.parametrize("churned", [False, True])
+def test_parity_smoke(db, attrs, queries, kind, churned):
+    _run_grid(db, attrs, queries[:2], kind, churned, (0.1, 1.0))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["flat", "ivf", "hnsw", "diskann"])
+@pytest.mark.parametrize("churned", [False, True])
+def test_parity_full_grid(db, attrs, queries, kind, churned):
+    _run_grid(db, attrs, queries, kind, churned, SELS)
+
+
+def test_parity_after_compaction_rebase(db, attrs, queries):
+    """Compaction rebases onto a non-identity stable-id mapping; filtered
+    serving over fresh mutations on top must still match the oracle (the
+    attribute store is stable-id keyed, so it survives the fold)."""
+    t = _churn(db, attrs, seed=17)
+    mdb, mids = t.materialize()
+    t.rebase(mdb, mids)
+    rng = np.random.default_rng(18)
+    _, ids = t.apply(InsertBatch(row_batch(mdb, rng, 20)))
+    attrs.put(ids, {"score": rng.random(20).astype(np.float32)})
+    t.apply(DeleteBatch(rng.choice(t.live_ids(), size=25, replace=False)))
+    eng = BatchEngine(mdb)
+    eng.attach_filters(attrs)
+    eng.attach_mutations(MutationView(t))
+    for sel in (0.1, 0.5, 1.0):
+        pred = quantile_pred(attrs, db.n_rows, sel)
+        for q in queries[:2]:
+            fq = dc_replace(q, predicate=pred)
+            gt = filtered_oracle(attrs, pred, fq, table=t)
+            for access, plan in _grid_plans(fq, "flat", sel,
+                                            t.n_live).items():
+                got = eng.search_batch([(fq, plan)])[0]
+                np.testing.assert_array_equal(
+                    np.asarray(got), gt,
+                    err_msg=f"post-rebase access={access} sel={sel}")
+
+
+def test_zero_match_dispatches_nothing(db, attrs, queries):
+    """A predicate matching zero rows returns an empty top-k WITHOUT any
+    kernel dispatch — for the fallback, IVF, and graph plan shapes."""
+    store = IndexStore(db, seed=0)
+    eng = BatchEngine(db, store=store)
+    eng.attach_filters(attrs)
+    pred = quantile_pred(attrs, db.n_rows, 0.0)
+    q = dc_replace(queries[0], predicate=pred)
+    plans = [
+        QueryPlan(q.qid, [], [], 1.0, 1.0, access_path="pre",
+                  selectivity=0.0),
+        QueryPlan(q.qid, [IndexSpec(q.vid, "ivf")], [40], 1.0, 1.0,
+                  access_path="post", selectivity=0.0),
+        QueryPlan(q.qid, [IndexSpec(q.vid, "hnsw")], [40], 1.0, 1.0,
+                  access_path="post", selectivity=0.0),
+        QueryPlan(q.qid, [], [], 1.0, 1.0, access_path="masked",
+                  selectivity=0.0),
+    ]
+    for plan in plans:
+        before = dict(eng.counters.as_dict())
+        got = eng.search_batch([(q, plan)])[0]
+        assert got.shape == (0,)
+        assert dict(eng.counters.as_dict()) == before, plan.access_path
+    # the metrics path scores the empty result as exact
+    m = eng.execute_batch([(q, plans[0])])[0]
+    assert m.recall == 1.0 and m.num_dist == 0
+
+
+def test_filtered_query_without_attrs_raises(db, queries):
+    eng = BatchEngine(db)  # no attach_filters
+    q = dc_replace(queries[0], predicate=Eq("category", "c0"))
+    plan = QueryPlan(q.qid, [], [], 1.0, 1.0, access_path="masked",
+                     selectivity=0.5)
+    with pytest.raises(ValueError, match="AttributeStore"):
+        eng.search_batch([(q, plan)])
+
+
+# ---- plan cache + group compiler keying -----------------------------------
+
+
+def test_plan_cache_keys_by_predicate(db, attrs, queries):
+    cache = PlanCache()
+    q = queries[0]
+    pred = Eq("category", "c1")
+    fq = dc_replace(q, predicate=pred)
+    plan = QueryPlan(fq.qid, [], [], 9.0, 1.0, access_path="pre",
+                     selectivity=0.05)
+    cache.put(fq, plan)
+    hit = cache.get(fq)
+    assert hit is not None and hit.access_path == "pre"
+    assert hit.selectivity == 0.05
+    assert cache.get(q) is None                        # unfiltered missed
+    other = dc_replace(q, predicate=Eq("category", "c2"))
+    assert cache.get(other) is None                    # other pred missed
+
+
+def test_groups_are_predicate_uniform(db, attrs, queries):
+    from repro.serve.compiler import compile_batch
+    pred = Eq("category", "c1")
+    q0, q1 = queries[0], dc_replace(queries[0], predicate=pred)
+    plan0 = QueryPlan(q0.qid, [], [], 1.0, 1.0)
+    plan1 = QueryPlan(q1.qid, [], [], 1.0, 1.0, access_path="masked",
+                      selectivity=0.2)
+    groups = compile_batch([(q0, plan0), (q1, plan1)])
+    assert len(groups) == 2  # same vid + signature, but predicate splits
+    keys = {g.key.pred for g in groups}
+    assert keys == {None, pred}
+
+
+# ---- online runtime + ingest integration ----------------------------------
+
+
+def test_ingest_runtime_serves_filtered_with_attribute_mutations(db, queries):
+    attrs = synth_attributes(db.n_rows, seed=5)
+    wl = Workload(queries=list(queries), probs=np.ones(len(queries)))
+    mint = Mint(db, index_kind="flat", seed=0, attributes=attrs)
+    cons = Constraints(theta_recall=0.9, theta_storage=3)
+    rt = IngestRuntime(db, mint, wl, cons,
+                       config=RuntimeConfig(max_batch=4, max_delay_ms=0.0,
+                                            measure=True),
+                       table=MutableTable(db))
+    assert rt.engine.attrs is attrs  # wired by OnlineRuntime.__init__
+    rng = np.random.default_rng(0)
+    new_ids = rt.insert(row_batch(db, rng, 6),
+                        attributes={"category": ["hot"] * 6,
+                                    "score": np.full(6, 0.5, np.float32)})
+    rt.delete(new_ids[:2])
+    q = dc_replace(queries[0], predicate=Eq("category", "hot"),
+                   qid=queries[0].qid + 1000)
+    ticket = rt.submit(q, now=0.0)
+    rt.drain(now=1.0)
+    got = np.asarray(ticket.metrics.ids)
+    gt = filtered_oracle(attrs, Eq("category", "hot"), q, table=rt.table)
+    np.testing.assert_array_equal(got, gt)
+    assert set(int(i) for i in got) <= set(int(i) for i in new_ids[2:])
+    assert ticket.metrics.recall == 1.0
+    # attributes riding a mutation REQUIRE an attribute store
+    rt.engine.detach_filters()
+    with pytest.raises(ValueError):
+        rt.insert(row_batch(db, rng, 2), attributes={"category": ["x", "y"]})
+    rt.close()
+
+
+def test_filtered_trace_generation(db, attrs, queries):
+    wl = Workload(queries=list(queries), probs=np.ones(len(queries)))
+    trace = make_trace(db, "filtered", workload=wl, attrs=attrs, n=60,
+                       qps=100.0, n_hot=2, p_hot=0.5, seed=3)
+    assert len(trace) == 60 and all(isinstance(e, TimedQuery) for e in trace)
+    preds = [e.query.predicate for e in trace]
+    with_pred = [p for p in preds if p is not None]
+    assert with_pred, "selectivity mix must emit filtered queries"
+    assert any(p is None for p in preds), "sel=1.0 draws are unfiltered"
+    # hot-predicate skew: far fewer distinct predicates than filtered draws
+    assert len(set(with_pred)) < len(with_pred)
+    # each Range's true selectivity lands near a mix target
+    for p in set(with_pred):
+        true = attrs.bitmap(p, np.arange(db.n_rows)).mean()
+        assert min(abs(true - s) for s in (0.01, 0.1, 0.5)) < 0.08
+
+
+# ---- roofline -------------------------------------------------------------
+
+
+def test_roofline_models_filtered_bytes():
+    base = modeled_scan_bytes(64, 20000, 64, 10)
+    assert "prefilter_bytes" not in base  # unchanged without selectivity
+    lo = modeled_scan_bytes(64, 20000, 64, 10, selectivity=0.05)
+    hi = modeled_scan_bytes(64, 20000, 64, 10, selectivity=0.95)
+    for m in (lo, hi):
+        assert m["bitmap_bytes"] > 0
+        assert m["masked_filtered_bytes"] > m["streaming_bytes"]
+    # gather amplification 2.0 puts the byte crossover at sel = 0.5,
+    # matching the planner's GATHER_OVERHEAD cost term
+    assert lo["prefilter_bytes"] < lo["masked_filtered_bytes"]
+    assert hi["prefilter_bytes"] > hi["masked_filtered_bytes"]
+
+
+# ---- property test: random predicate trees --------------------------------
+
+FIELDS = ("category", "score", "source")
+
+
+def _random_pred(rng, depth=0):
+    r = rng.random()
+    if depth >= 3 or r < 0.45:
+        f = FIELDS[int(rng.integers(3))]
+        if f == "score":
+            lo, hi = sorted(rng.random(2))
+            return Range("score", lo=float(lo), hi=float(hi))
+        vals = [f"c{int(rng.integers(10))}" if f == "category"
+                else f"s{int(rng.integers(6))}"
+                for _ in range(int(rng.integers(1, 4)))]
+        return Eq(f, vals[0]) if len(vals) == 1 else In(f, vals)
+    if r < 0.65:
+        return Not(_random_pred(rng, depth + 1))
+    op = And if r < 0.85 else Or
+    return op(_random_pred(rng, depth + 1), _random_pred(rng, depth + 1))
+
+
+def _assert_pred_consistent(db, attrs, q, pred):
+    """Host bitmap == device bitmap, and the in-kernel keep-masked scan
+    matches the host-filtered oracle bit-for-bit."""
+    ids = np.arange(db.n_rows)
+    host = attrs.bitmap(pred, ids)
+    dev = np.asarray(attrs.device_bitmap(pred, ids)).astype(bool)
+    np.testing.assert_array_equal(host, dev)
+    eng = BatchEngine(db)
+    eng.attach_filters(attrs)
+    fq = dc_replace(q, predicate=pred)
+    plan = QueryPlan(fq.qid, [], [], 1.0, 1.0, access_path="masked",
+                     selectivity=float(max(host.mean(), 1e-3)))
+    got = eng.search_batch([(fq, plan)])[0]
+    gt = filtered_oracle(attrs, pred, fq, db=db)
+    np.testing.assert_array_equal(np.asarray(got), gt)
+
+
+def test_random_predicate_trees_seeded(db, attrs, queries):
+    rng = np.random.default_rng(42)
+    for _ in range(10):
+        _assert_pred_consistent(db, attrs, queries[0], _random_pred(rng))
+
+
+if HAVE_HYP:
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_random_predicate_trees_property(seed):
+        tdb = make_database(96, COLS, seed=0)
+        tattrs = synth_attributes(tdb.n_rows, seed=3)
+        tq = make_queries(tdb, [(0, 1)], k=5, seed=7)[0]
+        rng = np.random.default_rng(seed)
+        _assert_pred_consistent(tdb, tattrs, tq, _random_pred(rng))
