@@ -12,7 +12,8 @@ def main() -> None:
     args = ap.parse_args()
     n = 8000 if args.quick else args.n_rows
 
-    from benchmarks import filter_bench, kernels_bench, paper_tables as T
+    from benchmarks import (filter_bench, kernels_bench, online_bench,
+                            paper_tables as T)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -21,6 +22,8 @@ def main() -> None:
     kernels_bench.run(quick=args.quick, measure=not args.quick)
     # filtered access-path grid -> BENCH_filter.json (nightly artifact)
     filter_bench.run(rows=min(n, 4000), quick=args.quick)
+    # online runtime: drift/retune + semantic cache -> BENCH_online.json
+    online_bench.run(rows=min(n, 4000))
     T.bench_endtoend(n_rows=n, kinds=("hnsw", "diskann"))
     T.bench_storage_sweep(n_rows=n)
     T.bench_scalability(n_rows=n)

@@ -153,6 +153,12 @@ class IngestRuntime(OnlineRuntime):
                         "mutation carries attributes but the engine has no "
                         "AttributeStore attached")
                 self.engine.attrs.put(ids, attributes)
+            if self.semcache is not None:
+                # mutation flushed: cached results may omit the new rows /
+                # contain the deleted ones. Mutations deliberately do NOT
+                # bump the plan-cache generation (planner templates stay
+                # valid), so the semcache keeps its own data epoch.
+                self.semcache.bump()
         return lsn, ids
 
     def insert(self, vectors, attributes=None) -> np.ndarray:

@@ -10,6 +10,8 @@ from repro.online.plancache import PlanCache
 from repro.online.retuner import BackgroundRetuner, RetuneEvent
 from repro.online.runtime import OnlineRuntime, RuntimeConfig
 from repro.online.scheduler import MicroBatcher, Ticket
+from repro.online.semcache import (SemanticCache, SemCacheConfig,
+                                   TenantSemCaches)
 from repro.online.trace import (TimedMutation, TimedQuery, burst_trace,
                                 churn_trace, diurnal_trace, hot_item_trace,
                                 make_trace, row_batch, steady_trace,
@@ -17,7 +19,8 @@ from repro.online.trace import (TimedMutation, TimedQuery, burst_trace,
 
 __all__ = [
     "BackgroundRetuner", "DriftDetector", "DriftReport", "MicroBatcher",
-    "OnlineRuntime", "PlanCache", "RetuneEvent", "RuntimeConfig", "Ticket",
+    "OnlineRuntime", "PlanCache", "RetuneEvent", "RuntimeConfig",
+    "SemCacheConfig", "SemanticCache", "TenantSemCaches", "Ticket",
     "TimedMutation", "TimedQuery", "WorkloadMonitor", "burst_trace",
     "churn_trace", "diurnal_trace", "hot_item_trace", "make_trace",
     "reference_histogram", "row_batch", "steady_trace", "tenant_skew_trace",

@@ -27,6 +27,7 @@ from repro.online.monitor import (DriftDetector, WorkloadMonitor,
 from repro.online.plancache import PlanCache, constraints_fingerprint
 from repro.online.retuner import BackgroundRetuner, RetuneEvent
 from repro.online.scheduler import MicroBatcher, Ticket
+from repro.online.semcache import SemanticCache, SemCacheConfig
 from repro.online.trace import TimedQuery
 from repro.serve.engine import BatchEngine
 
@@ -49,6 +50,17 @@ class RuntimeConfig:
     async_flush: bool = False
     workers: int = 2
     stage_transfers: bool = True
+    # plan cache (DESIGN.md §7): bounded LRU by default — unbounded plan
+    # caches grow one template per (vid, k, predicate) forever under
+    # filtered / high-cardinality workloads. None = unbounded (opt-in).
+    plan_cache_capacity: int | None = 2048
+    # semantic result cache (DESIGN.md §13): probe recent (query vector,
+    # plan, predicate) results before the batcher; hits within ε bypass
+    # the flush entirely. ε=0 serves only bit-exact repeat queries.
+    semcache: bool = False
+    semcache_epsilon: float = 0.0
+    semcache_capacity: int = 256     # entries per namespace ring
+    semcache_namespaces: int = 32    # live namespaces per tenant
 
 
 class OnlineRuntime:
@@ -81,7 +93,8 @@ class OnlineRuntime:
             self.engine.attach_filters(mint.attributes,
                                        mint.selectivity_estimator())
         self.planner = mint.planner(constraints)
-        self.cache = PlanCache(constraints=constraints_fingerprint(constraints))
+        self.cache = PlanCache(constraints=constraints_fingerprint(constraints),
+                               capacity=self.config.plan_cache_capacity)
         self.cache.seed(workload, self.result)
         self.monitor = WorkloadMonitor(window=self.config.window)
         self.detector = DriftDetector(reference_histogram(workload),
@@ -93,10 +106,19 @@ class OnlineRuntime:
         flush_exec = self.executor if self.config.async_flush else None
         stage = (self._stage if flush_exec is not None
                  and self.config.stage_transfers else None)
+        self.semcache = None
+        if self.config.semcache:
+            self.semcache = SemanticCache(
+                SemCacheConfig(epsilon=self.config.semcache_epsilon,
+                               capacity=self.config.semcache_capacity,
+                               max_namespaces=self.config.semcache_namespaces),
+                scan=self.engine.cache_probe,
+                generation=lambda: self.cache.generation)
         self.batcher = MicroBatcher(self._execute, self.plan_for,
                                     max_batch=self.config.max_batch,
                                     max_delay_ms=self.config.max_delay_ms,
-                                    executor=flush_exec, stage=stage)
+                                    executor=flush_exec, stage=stage,
+                                    semcache=self.semcache)
         self._swap_lock = threading.Lock()
 
     # ---- request path -----------------------------------------------------
@@ -187,10 +209,14 @@ class OnlineRuntime:
         return self.retuner.events
 
     def stats(self) -> dict:
+        # surface plan-cache LRU pressure in the scheduler stats snapshot
+        self.batcher.stats.plan_evictions = self.cache.evictions
         return {
             "generation": self.generation,
             "plan_cache": self.cache.stats(),
             "batcher": self.batcher.stats.as_dict(),
+            "semcache": (self.semcache.stats()
+                         if self.semcache is not None else None),
             "dispatches": self.engine.counters.as_dict(),
             "monitor": {"window": len(self.monitor),
                         "total_observed": self.monitor.total_observed,

@@ -70,6 +70,8 @@ class Ticket:
     future: object | None = None   # async_.Future of its flush job
     t_submit_wall: float = 0.0     # wall-clock twins of t_submit/t_done
     t_done_wall: float | None = None
+    cache_hit: bool = False        # served by the semantic cache, no flush
+    cache_token: object | None = None  # semcache AdmissionToken on a miss
 
     @property
     def done(self) -> bool:
@@ -115,6 +117,9 @@ class BatcherStats:
     flush_deadline: int = 0  # flushes triggered by the oldest-waiter deadline
     flush_forced: int = 0    # explicit drains
     tenant_queries: dict = field(default_factory=dict)  # TenantId -> served
+    cache_hits: int = 0      # semantic-cache hits (bypassed flush entirely)
+    cache_misses: int = 0    # probed but fell through to the batcher
+    plan_evictions: int = 0  # plan-cache LRU evictions (snapshot at read)
 
     @property
     def mean_batch(self) -> float:
@@ -125,6 +130,9 @@ class BatcherStats:
                 "mean_batch": self.mean_batch, "flush_size": self.flush_size,
                 "flush_deadline": self.flush_deadline,
                 "flush_forced": self.flush_forced,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "plan_evictions": self.plan_evictions,
                 "tenant_queries": dict(sorted(self.tenant_queries.items()))}
 
 
@@ -157,7 +165,8 @@ class MicroBatcher:
                  max_batch: int = 32, max_delay_ms: float = 5.0,
                  quantum: int = 1, fair: bool = True,
                  auto_flush: bool = True, executor=None,
-                 stage: Callable[[list[Ticket]], object] | None = None):
+                 stage: Callable[[list[Ticket]], object] | None = None,
+                 semcache=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if quantum < 1:
@@ -176,6 +185,12 @@ class MicroBatcher:
         # ``execute(tickets, staged)`` when a stage hook exists.
         self.executor = executor
         self.stage = stage
+        # semantic result cache (DESIGN.md §13): probed at admission under
+        # the lock — hits complete the ticket immediately and never enqueue;
+        # misses carry an AdmissionToken that _apply_results redeems when
+        # their flush lands. Single-tenant: a SemanticCache; multi-tenant:
+        # a TenantSemCaches router (tokens bind to the owning cache).
+        self.semcache = semcache
         self._inflight: list[_FlushJob] = []
         self.stats = BatcherStats()
         self._queues: dict[TenantId, deque[Ticket]] = {}
@@ -211,6 +226,19 @@ class MicroBatcher:
                 plan = self.plan_for(query)
             ticket = Ticket(query=query, plan=plan, t_submit=now,
                             tenant=tenant, t_submit_wall=t_wall)
+            if self.semcache is not None:
+                ids, token = self.semcache.probe(query, plan, tenant)
+                if ids is not None:  # hit: complete now, bypass the flush
+                    self.stats.cache_hits += 1
+                    ticket.ids = ids
+                    ticket.cache_hit = True
+                    ticket.flushed = True
+                    ticket.t_done = now
+                    ticket.t_done_wall = time.time()
+                    return ticket
+                if token is not None:
+                    self.stats.cache_misses += 1
+                    ticket.cache_token = token
             q = self._queues.get(tenant)
             if q is None:
                 q = self._queues[tenant] = deque()
@@ -355,8 +383,8 @@ class MicroBatcher:
         self._apply_results(job.tickets, results, job.now)
         return len(job.tickets)
 
-    @staticmethod
-    def _apply_results(batch: list[Ticket], results: list, now: float) -> None:
+    def _apply_results(self, batch: list[Ticket], results: list,
+                       now: float) -> None:
         t_wall = time.time()
         for ticket, res in zip(batch, results):
             if hasattr(res, "ids"):  # ExecutionMetrics
@@ -367,6 +395,11 @@ class MicroBatcher:
             ticket.t_done = now
             ticket.t_done_wall = t_wall
             ticket.batch_size = len(batch)
+            if ticket.cache_token is not None:
+                # semcache admission: keyed at the CURRENT (generation,
+                # epoch) — this result reflects the table at flush time
+                ticket.cache_token.admit(ticket.ids)
+                ticket.cache_token = None
 
     def _harvest(self, block: bool) -> list[Ticket]:
         """Collect tickets of landed flush jobs (async mode). ``block``

@@ -173,11 +173,13 @@ def burst_trace(db: MultiVectorDatabase, workload: Workload, burst_vid: Vid,
 def hot_item_trace(db: MultiVectorDatabase, vid: Vid, n: int,
                    qps: float = 200.0, n_hot: int = 4, p_hot: float = 0.85,
                    k: int = 10, seed: int = 0, t0: float = 0.0,
-                   qid_start: int = 0) -> list[TimedQuery]:
+                   qid_start: int = 0, noise: float = 0.5) -> list[TimedQuery]:
     """Hot-item skew: with probability ``p_hot`` a query lands near one of
-    ``n_hot`` popular rows; the rest are uniform."""
+    ``n_hot`` popular rows; the rest are uniform. ``noise`` is the
+    per-column query noise radius — tighten it to model near-duplicate
+    hot traffic (the semantic-cache bench's ε-sweep knob)."""
     vid = norm_vid(vid)
-    fac = _QueryFactory(db, k, seed, qid_start=qid_start)
+    fac = _QueryFactory(db, k, seed, qid_start=qid_start, noise=noise)
     hot_rows = fac.rng.choice(db.n_rows, size=n_hot, replace=False)
     out = []
     for i in range(n):
@@ -194,14 +196,18 @@ def tenant_skew_trace(db: MultiVectorDatabase,
                       noisy_len: float = 0.4, k: int | None = None,
                       seed: int = 0, t0: float = 0.0, qid_start: int = 0,
                       dbs: dict[TenantId, MultiVectorDatabase] | None = None,
-                      ) -> list[TimedQuery]:
+                      n_hot: int = 0, p_hot: float = 0.0,
+                      noise: float = 0.5) -> list[TimedQuery]:
     """Noisy-neighbor scenario: every tenant contributes an independent
     steady stream at ``qps / len(tenants)``; inside the noisy window
     (fractions of the nominal trace span ``n / qps``) the ``noisy``
     tenant's arrival rate is multiplied by ``noisy_mult`` while the
     victims keep their base rate. Streams are merged by arrival time and
     each ``TimedQuery`` carries its tenant tag. ``dbs`` optionally maps
-    tenants to their own databases (default: the shared ``db``)."""
+    tenants to their own databases (default: the shared ``db``).
+    ``n_hot`` > 0 adds per-tenant hot-item skew on top: with probability
+    ``p_hot`` a tenant's query lands near one of ITS ``n_hot`` popular
+    rows (``noise`` radius) — the multi-tenant semantic-cache scenario."""
     if not tenants:
         raise ValueError("tenant_skew needs at least one tenant workload")
     names = sorted(tenants)
@@ -213,14 +219,18 @@ def tenant_skew_trace(db: MultiVectorDatabase,
     span = n / qps
     win_lo, win_hi = t0 + noisy_start * span, t0 + (noisy_start + noisy_len) * span
     qids = itertools.count(qid_start)
-    facs, mixes, next_t = {}, {}, {}
+    facs, mixes, next_t, hots = {}, {}, {}, {}
     for i, name in enumerate(names):
         wl = tenants[name]
         tdb = dbs.get(name, db)
         tk = k if k is not None else wl.queries[0].k
-        facs[name] = _QueryFactory(tdb, tk, seed + 101 * i, qids=qids)
+        facs[name] = _QueryFactory(tdb, tk, seed + 101 * i, qids=qids,
+                                   noise=noise)
         mixes[name] = _workload_vids(wl)
         next_t[name] = t0 + (i + 1) / qps  # stagger first arrivals
+        if n_hot > 0:
+            hots[name] = facs[name].rng.choice(tdb.n_rows, size=n_hot,
+                                               replace=False)
     out: list[TimedQuery] = []
     for _ in range(n):
         name = min(next_t, key=lambda tid: (next_t[tid], tid))
@@ -228,7 +238,11 @@ def tenant_skew_trace(db: MultiVectorDatabase,
         fac = facs[name]
         vids, probs = mixes[name]
         vid = vids[int(fac.rng.choice(len(vids), p=probs))]
-        out.append(TimedQuery(t=t, query=fac.make(vid), tenant=name))
+        row = None
+        if n_hot > 0 and fac.rng.random() < p_hot:
+            row = int(fac.rng.choice(hots[name]))
+        out.append(TimedQuery(t=t, query=fac.make(vid, row=row),
+                              tenant=name))
         rate = base_rate
         if name == noisy and win_lo <= t < win_hi:
             rate *= noisy_mult

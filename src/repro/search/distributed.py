@@ -21,33 +21,51 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels.topk.kernel import NEG_INF
 
 
-def _local_scan(db_shard, qvecs, k, shard_offset, valid_n=None):
+def _local_scan(db_shard, qvecs, k, shard_offset, valid_n=None, bad=None):
     scores = qvecs @ db_shard.T                       # (Q, N_local)
+    masked = None
     if valid_n is not None:
         # rows at global index >= valid_n are column-store padding
         gids = shard_offset + jnp.arange(db_shard.shape[0])
-        scores = jnp.where((gids >= valid_n)[None, :], NEG_INF, scores)
+        masked = (gids >= valid_n)[None, :]
+    if bad is not None:
+        # per-row bad mask (tombstones ∪ ¬predicate), sharded like db rows
+        b = bad.astype(bool)[None, :]
+        masked = b if masked is None else (masked | b)
+    if masked is not None:
+        scores = jnp.where(masked, NEG_INF, scores)
     vals, idx = jax.lax.top_k(scores, k)
-    return vals, idx + shard_offset
+    idx = idx + shard_offset
+    if masked is not None:
+        # masked tail slots report id 0 (same contract as the fused
+        # kernels) so downstream stable-id gathers never index padding
+        idx = jnp.where(vals <= NEG_INF / 2, 0, idx)
+    return vals, idx
 
 
 def make_search_step(mesh: Mesh, k: int, axis: str = "data",
-                     valid_n: int | None = None):
+                     valid_n: int | None = None, masked: bool = False):
     """Returns search_step(db_shard_view, qvecs) -> (vals (Q,k), ids (Q,k)).
 
     db is laid out (N, d) sharded on axis 0 over ``axis``; queries are
     replicated. The merge all-gathers only (Q, k) candidates per shard.
     ``valid_n`` marks trailing rows as column-store padding (masked out),
     so the serving engine can scan pre-padded device-resident columns.
+    ``masked=True`` adds a third operand ``bad`` — a (N,) row bitmap
+    (True/1 = tombstoned or filtered out), sharded exactly like the rows —
+    so mesh cells mask in-cell instead of over-fetching past dead rows and
+    score-killing them on the host. Bad rows come back at NEG_INF with id
+    0, matching the fused-kernel contract.
     """
     n_shards = mesh.shape[axis]
 
-    def step(db, qvecs):
-        def shard_fn(db_local, q_local):
+    def step(db, qvecs, bad=None):
+        def shard_fn(db_local, q_local, *rest):
             rank = jax.lax.axis_index(axis)
             n_local = db_local.shape[0]
             vals, ids = _local_scan(db_local, q_local, min(k, db_local.shape[0]),
-                                    rank * n_local, valid_n=valid_n)
+                                    rank * n_local, valid_n=valid_n,
+                                    bad=rest[0] if rest else None)
             # tournament merge: gather candidates only
             all_vals = jax.lax.all_gather(vals, axis)   # (S, Q, k)
             all_ids = jax.lax.all_gather(ids, axis)
@@ -60,11 +78,13 @@ def make_search_step(mesh: Mesh, k: int, axis: str = "data",
 
         spec_db = P(axis, None)
         spec_q = P()
+        in_specs = (spec_db, spec_q) + ((P(axis),) if masked else ())
+        args = (db, qvecs) + ((bad,) if masked else ())
         # outputs are bitwise-identical on every shard after the gather +
         # top_k, but replication-rule inference can't see that — disable the check
         return shard_map(shard_fn, mesh=mesh,
-                         in_specs=(spec_db, spec_q),
-                         out_specs=(P(), P()), check_rep=False)(db, qvecs)
+                         in_specs=in_specs,
+                         out_specs=(P(), P()), check_rep=False)(*args)
 
     return step
 

@@ -26,8 +26,8 @@ Mutations (DESIGN.md §9): with a ``repro.ingest.MutationView`` attached,
 execution serves the LIVE table instead of the frozen snapshot —
 
   - base scans thread the tombstone bitmap into the scan kernel as a score
-    mask (deleted rows can never win a top-k slot; under a mesh they are
-    over-fetched and filtered on host instead);
+    mask (deleted rows can never win a top-k slot; under a mesh the same
+    bitmap rides the distributed step's sharded ``bad`` operand);
   - every index additionally brute-force scans the per-vid DELTA segment
     and merges base + delta candidates by partial score with the canonical
     (score desc, stable id asc) order — exactly the candidate list an
@@ -180,6 +180,41 @@ def _gather_scores(data: jnp.ndarray, rows: jnp.ndarray, qmat: jnp.ndarray):
 @jax.jit
 def _xla_scores(qmat: jnp.ndarray, sub: jnp.ndarray) -> jnp.ndarray:
     return qmat @ sub.T
+
+
+@jax.jit
+def _xla_cache_probe(qmat: jnp.ndarray, mat: jnp.ndarray, valid_n):
+    """Interpret-mode mirror of the streaming l2 probe: (B, d) queries vs
+    (C, d) cached query vectors -> nearest (neg squared distance, id) per
+    row. ``valid_n`` is traced, so ring-buffer fill level never recompiles."""
+    q = qmat.astype(jnp.float32)
+    m = mat.astype(jnp.float32)
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)
+    msq = jnp.sum(m * m, axis=1)[None, :]
+    s = -(qsq - 2.0 * (q @ m.T) + msq)
+    pad = jnp.arange(m.shape[0], dtype=jnp.int32)[None, :] >= valid_n
+    s = jnp.where(pad, NEG_INF, s)
+    return jax.lax.top_k(s, 1)
+
+
+def cache_probe_scan(qmat, mat, valid_n, interpret: bool | None = None):
+    """Batched semantic-cache probe (DESIGN.md §13): ONE brute-force L2
+    dispatch of (B, d) query vectors against the cache's (C, d) query
+    matrix — the streaming fused scan on TPU (the cache is just a tiny
+    second table), a jitted XLA mirror under interpret mode (Pallas
+    interpret runs its grid in Python). Returns host (vals, ids) with
+    vals = -(squared L2); rows at or past ``valid_n`` are masked."""
+    from repro.kernels.common import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
+    qmat = jnp.asarray(qmat, dtype=jnp.float32)
+    mat = jnp.asarray(mat, dtype=jnp.float32)
+    if interpret:
+        vals, ids = _xla_cache_probe(qmat, mat, valid_n)
+    else:
+        vals, ids = streaming_fused_scan(qmat, mat, k=1, metric="l2",
+                                         valid_n=valid_n, interpret=False)
+    return np.asarray(vals), np.asarray(ids)
 
 
 class BatchEngine:
@@ -619,9 +654,8 @@ class BatchEngine:
         the "post" access differs only in planned dispatch depth. IVF
         probes score-kill non-matching rows before selection; graph walks
         filter their results; delta segments are keep-masked the same way
-        as the base. Under a mesh the distributed step cannot mask, so
-        scans over-fetch past the non-matching rows and score-kill on
-        host."""
+        as the base. Under a mesh the same bitmaps ride the distributed
+        step's sharded ``bad`` operand — no over-fetch on any path."""
         specs, buckets = group.specs, group.buckets
         items = group.items
         B = len(items)
@@ -757,18 +791,13 @@ class BatchEngine:
                             depth: int, fs: _FilterState,
                             dead_mask=None) -> tuple[np.ndarray, np.ndarray]:
         """Keep-masked flat scan over an unmutated base: kernel paths get
-        the device keep bitmap; the distributed step cannot mask, so the
-        mesh path over-fetches past the non-matching rows and score-kills
-        them on host. Returns (scores, physical ids), best-first."""
-        if self.mesh is None:
-            return self._flat_scan_scored(
-                col, qmat, depth, dead_mask=dead_mask,
-                keep_mask=fs.base_keep_dev(int(col.data.shape[0])))
-        n_bad = col.n_rows - fs.n_match_base
-        k_eff = min(ek_bucket(depth + n_bad), col.n_rows)
-        s, ids = self._flat_scan_scored(col, qmat, k_eff)
-        s = np.where(fs.base_keep[ids], s, NEG_INF).astype(np.float32)
-        return s, ids
+        the device keep bitmap; the distributed step threads the same
+        bitmap through its sharded ``bad`` operand, so mesh cells no
+        longer over-fetch past non-matching rows and host-filter. Returns
+        (scores, physical ids), best-first."""
+        return self._flat_scan_scored(
+            col, qmat, depth, dead_mask=dead_mask,
+            keep_mask=fs.base_keep_dev(int(col.data.shape[0])))
 
     def _filtered_ground_truth(self, query: Query, pred) -> np.ndarray:
         """Brute-force oracle: exact top-k over exactly the live rows
@@ -816,6 +845,15 @@ class BatchEngine:
             return _xla_scores(qmat, sub)
         return batched_scores(qmat, sub, interpret=False)
 
+    def cache_probe(self, qmat, mat, valid_n):
+        """Semantic-cache probe hook (DESIGN.md §13): one batched L2
+        dispatch of query vectors against the cache's query matrix, on
+        this engine's kernel route (streaming on TPU, XLA under
+        interpret). The ``SemanticCache`` is handed this bound method as
+        its ``scan`` so the probe rides the same dispatch discipline as
+        everything else the engine launches."""
+        return cache_probe_scan(qmat, mat, valid_n, interpret=self.interpret)
+
     def _flat_scan(self, col: DeviceColumn, qmat: jnp.ndarray, k: int) -> np.ndarray:
         return self._flat_scan_scored(col, qmat, k)[1]
 
@@ -825,21 +863,30 @@ class BatchEngine:
                           ) -> tuple[np.ndarray, np.ndarray]:
         """One batched flat dispatch -> (scores, ids), best-first. The
         tombstone ``dead_mask`` and the predicate ``keep_mask`` are threaded
-        into the kernel row mask (masked rows come back at -inf and are
-        dropped by the merge); the distributed step has no mask argument,
-        so mesh callers over-fetch instead."""
+        into the kernel row mask — and, under a mesh, composed into the
+        distributed step's sharded ``bad`` operand — so masked rows come
+        back at -inf (id 0) and are dropped by the merge on every path."""
         setattr(self.counters, counter, getattr(self.counters, counter) + 1)
         if self.mesh is not None:
-            if keep_mask is not None:
-                raise RuntimeError(
-                    "distributed scan cannot mask: mesh callers must "
-                    "over-fetch and score-kill on host, not pass keep_mask")
-            key = (k, col.n_rows)
+            bad = None
+            if dead_mask is not None or keep_mask is not None:
+                # compose tombstones ∪ ¬predicate into one (N,) f32 row
+                # bitmap, sharded P(axis) exactly like the column rows
+                bad = jnp.zeros(int(col.data.shape[0]), dtype=jnp.float32)
+                if dead_mask is not None:
+                    bad = jnp.maximum(bad, dead_mask.astype(jnp.float32))
+                if keep_mask is not None:
+                    bad = jnp.maximum(
+                        bad, 1.0 - keep_mask.astype(jnp.float32))
+            key = (k, col.n_rows, bad is not None)
             if key not in self._dist_steps:
                 from repro.search.distributed import make_search_step
                 self._dist_steps[key] = make_search_step(
-                    self.mesh, k=k, axis=self.axis, valid_n=col.n_rows)
-            vals, ids = self._dist_steps[key](col.data, qmat)
+                    self.mesh, k=k, axis=self.axis, valid_n=col.n_rows,
+                    masked=bad is not None)
+            step = self._dist_steps[key]
+            vals, ids = (step(col.data, qmat, bad) if bad is not None
+                         else step(col.data, qmat))
         elif self.streaming:
             vals, ids = streaming_fused_scan(
                 qmat, col.data, k=min(k, col.n_rows), valid_n=col.n_rows,
@@ -856,27 +903,17 @@ class BatchEngine:
     def _base_scan_mv(self, mv, col: DeviceColumn, qmat: jnp.ndarray,
                       depth: int, fstate: _FilterState | None = None
                       ) -> tuple[np.ndarray, np.ndarray]:
-        """Masked base scan under mutations -> (scores, STABLE ids). Under
-        a mesh the distributed step cannot mask, so the scan over-fetches
-        past the bad rows (tombstones ∪ non-matching; bucketed to bound
-        recompiles) and score-kills them on host — both paths return the
-        exact alive (and matching) top-``depth``."""
+        """Masked base scan under mutations -> (scores, STABLE ids).
+        Tombstones ∪ non-matching rows ride the kernel row mask on the
+        single-device paths and the distributed step's sharded ``bad``
+        operand under a mesh — every path returns the exact alive (and
+        matching) top-``depth`` with no over-fetch."""
         dead = mv.base_dead_mask(int(col.data.shape[0]))
-        if self.mesh is None or (dead is None and fstate is None):
-            keep = (None if fstate is None
-                    else fstate.base_keep_dev(int(col.data.shape[0])))
-            s, ids = self._flat_scan_scored(col, qmat,
-                                            min(depth, col.n_rows),
-                                            dead_mask=dead, keep_mask=keep)
-        else:
-            n_bad = (mv.n_dead_base if fstate is None
-                     else col.n_rows - fstate.n_match_base)
-            k_eff = min(ek_bucket(depth + n_bad), col.n_rows)
-            s, ids = self._flat_scan_scored(col, qmat, k_eff)
-            ok = mv.table.base_alive[ids]
-            if fstate is not None:
-                ok = ok & fstate.base_keep[ids]
-            s = np.where(ok, s, NEG_INF).astype(np.float32)
+        keep = (None if fstate is None
+                else fstate.base_keep_dev(int(col.data.shape[0])))
+        s, ids = self._flat_scan_scored(col, qmat,
+                                        min(depth, col.n_rows),
+                                        dead_mask=dead, keep_mask=keep)
         return s, mv.translate(ids)
 
     def _delta_scan(self, mv, vid, items, depth: int,
@@ -884,32 +921,21 @@ class BatchEngine:
         """Brute-force delta-segment scan for one (group, index): one
         batched dispatch over the padded delta matrix -> (scores, STABLE
         ids, n_delta_rows); (None, None, 0) when the table has no delta.
-        Under a mesh the dispatch cannot mask, so tombstoned (and
-        non-matching) delta rows are score-killed on host instead (delta
-        arrays are small)."""
+        Tombstone and predicate masks ride the dispatch on every path —
+        the distributed step takes them through its sharded ``bad``
+        operand, so mesh cells no longer over-fetch the whole delta."""
         dcol = mv.delta(vid)
         if dcol is None:
             return None, None, 0
         qmat = dcol.col.pad_queries(
             np.stack([it.query.concat(vid) for it in items]))
-        host_kill = self.mesh is not None and (not dcol.alive.all()
-                                               or fstate is not None)
         k_eff = min(depth, dcol.n_rows)
-        if host_kill:
-            # the distributed step cannot mask: over-fetch past the bad
-            # rows, then score-kill them on host (delta arrays are small)
-            k_eff = dcol.n_rows
         keep = None
-        if fstate is not None and self.mesh is None:
+        if fstate is not None:
             keep = fstate.delta_keep_dev(int(dcol.col.data.shape[0]))
         s, ids = self._flat_scan_scored(dcol.col, qmat, k_eff,
                                         dead_mask=dcol.dead_mask,
                                         keep_mask=keep, counter="delta")
-        if host_kill:
-            ok = dcol.alive[ids]
-            if fstate is not None:
-                ok = ok & fstate.delta_keep[ids]
-            s = np.where(ok, s, NEG_INF).astype(np.float32)
         return s, dcol.ids[ids], dcol.n_rows
 
     def _merged_scan_mv(self, mv, col: DeviceColumn, qmat: jnp.ndarray,

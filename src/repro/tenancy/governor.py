@@ -41,6 +41,7 @@ class MemoryGovernor:
         self.default_quota_bytes = default_quota_bytes
         self._stores: dict[TenantId, object] = {}   # tenant -> column store
         self._delta_stores: dict[TenantId, object] = {}  # tenant -> segments
+        self._semcaches: dict[TenantId, object] = {}  # tenant -> SemanticCache
         self._quota: dict[TenantId, int | None] = {}
         self._lru: OrderedDict[_Key, int] = OrderedDict()  # key -> nbytes
         self._tenant_bytes: dict[TenantId, int] = {}
@@ -74,6 +75,16 @@ class MemoryGovernor:
         with self._lock:
             self._delta_stores[tenant] = segments
 
+    def register_semcache(self, tenant: TenantId, cache) -> None:
+        """Attach a tenant's semantic result cache (``online.SemanticCache``).
+        Its device-resident query matrices are charged under keys
+        ``("semcache", <namespace id>)`` against the same tenant quota and
+        global budget — cached results compete with the tenant's hot
+        columns for device bytes, and under pressure the governor spills
+        cache namespaces exactly like cold columns (host ring retained)."""
+        with self._lock:
+            self._semcaches[tenant] = cache
+
     def rebind(self, tenant: TenantId, store) -> None:
         """Point an existing registration at a replacement column store
         (post-compaction swap); quota and accounting carry over, stale
@@ -82,7 +93,8 @@ class MemoryGovernor:
             if tenant not in self._stores:
                 raise KeyError(f"tenant {tenant!r} not registered")
             for key in [k for k in self._lru
-                        if k[0] == tenant and k[1] and k[1][0] != "delta"]:
+                        if k[0] == tenant and k[1]
+                        and k[1][0] not in ("delta", "semcache")]:
                 self.release(*key)
             self._stores[tenant] = store
 
@@ -149,9 +161,12 @@ class MemoryGovernor:
 
     def _evict(self, tenant: TenantId, vid: Vid) -> None:
         # delta-segment keys are namespaced ("delta",) + vid and owned by
-        # the tenant's DeltaSegments cache, not its column store
+        # the tenant's DeltaSegments cache; ("semcache", ns) keys by its
+        # SemanticCache — neither belongs to the column store
         if vid and vid[0] == "delta":
             store = self._delta_stores.get(tenant)
+        elif vid and vid[0] == "semcache":
+            store = self._semcaches.get(tenant)
         else:
             store = self._stores.get(tenant)
         self.evictions += 1

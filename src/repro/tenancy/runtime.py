@@ -40,6 +40,8 @@ from repro.online.plancache import PlanCache, constraints_fingerprint
 from repro.online.retuner import BackgroundRetuner, RetuneEvent
 from repro.online.runtime import RuntimeConfig
 from repro.online.scheduler import MicroBatcher, Ticket
+from repro.online.semcache import (SemanticCache, SemCacheConfig,
+                                   TenantSemCaches)
 from repro.online.trace import TimedMutation, TimedQuery
 from repro.serve.engine import BatchEngine
 from repro.tenancy.governor import MemoryGovernor
@@ -172,8 +174,13 @@ class MultiTenantRuntime:
         self.governor = MemoryGovernor(budget_bytes)
         self.cstores = TenantColumnStores(self.governor)
         self.istores = TenantIndexStores()
+        # explicit capacity wins; otherwise the RuntimeConfig default keeps
+        # the shared cache LRU-bounded (None here used to mean unbounded)
+        if plan_cache_capacity is None:
+            plan_cache_capacity = self.config.plan_cache_capacity
         self.cache = PlanCache(capacity=plan_cache_capacity)
         self._tenants: dict[TenantId, _TenantState] = {}
+        self.semcaches: dict[TenantId, SemanticCache] = {}
         for spec in tenants:
             if spec.tenant_id in self._tenants:
                 raise ValueError(f"duplicate tenant {spec.tenant_id!r}")
@@ -182,13 +189,30 @@ class MultiTenantRuntime:
             self.cache.register_tenant(
                 spec.tenant_id, constraints_fingerprint(spec.constraints))
             self.cache.seed(spec.workload, st.result, tenant=spec.tenant_id)
+            if self.config.semcache:
+                # per-tenant namespaces: each tenant gets its own cache
+                # keyed on ITS plan-cache generation, charged to ITS
+                # governor quota, probing through ITS engine's kernel route
+                cache = SemanticCache(
+                    SemCacheConfig(
+                        epsilon=self.config.semcache_epsilon,
+                        capacity=self.config.semcache_capacity,
+                        max_namespaces=self.config.semcache_namespaces),
+                    scan=st.engine.cache_probe,
+                    generation=(lambda t=spec.tenant_id:
+                                self.cache.generation_of(t)),
+                    governor=self.governor, tenant=spec.tenant_id)
+                self.semcaches[spec.tenant_id] = cache
+                self.governor.register_semcache(spec.tenant_id, cache)
         flush_exec = self.executor if self.config.async_flush else None
         self.batcher = MicroBatcher(self._execute, _no_default_plan,
                                     max_batch=self.config.max_batch,
                                     max_delay_ms=self.config.max_delay_ms,
                                     quantum=quantum, fair=fair,
                                     auto_flush=auto_flush,
-                                    executor=flush_exec)
+                                    executor=flush_exec,
+                                    semcache=(TenantSemCaches(self.semcaches)
+                                              if self.semcaches else None))
 
     def _ensure_executor(self) -> WorkerPool:
         if self.executor is None:
@@ -353,7 +377,13 @@ class MultiTenantRuntime:
         st = self._ingest_state(tenant)
         with self.batcher.lock:
             self.batcher.sync_inflight()
-            return st.table.apply(mutation)
+            out = st.table.apply(mutation)
+            sc = self.semcaches.get(tenant)
+            if sc is not None:
+                # invalidate ONLY this tenant's cached results (semcache
+                # data epoch — mutations never bump plan-cache generations)
+                sc.bump()
+            return out
 
     def apply_timed(self, tm: TimedMutation) -> None:
         """Resolve one churn-trace mutation against its tenant's table and
@@ -471,6 +501,8 @@ class MultiTenantRuntime:
                       "resident_vids": st.cstore.resident(),
                       "device_bytes": self.governor.tenant_bytes(tid),
                       "table": st.table.stats() if st.table else None,
+                      "semcache": (self.semcaches[tid].stats()
+                                   if tid in self.semcaches else None),
                       "retunes": (len(st.retuner.events)
                                   if st.retuner is not None else None)}
                 for tid, st in sorted(self._tenants.items())

@@ -504,6 +504,73 @@ def test_churn_under_seeded_interleavings_matches_serial(db, mint_flat, wl,
         assert a.batch_size == b.batch_size and a.t_done == b.t_done
 
 
+@pytest.mark.parametrize("seed", range(3))
+def test_semcache_churn_never_serves_stale_hits(db, mint_flat, wl, cons,
+                                                tuned_flat, seed):
+    """ACCEPTANCE: with the semantic cache (ε=0) in front of the batcher,
+    interleaved mutate/flush/compact under seeded interleavings never
+    serves a hit across a generation or data-epoch bump: every ticket —
+    cache hit (completed at submit) or flushed — equals the live-table
+    oracle AT THAT MOMENT, and runs are deterministic per seed."""
+    def run(s):
+        rt = IngestRuntime(
+            db, mint_flat, wl, cons, result=tuned_flat,
+            config=RuntimeConfig(max_batch=2, cooldown_s=1e9,
+                                 drift_threshold=2.0, async_flush=True,
+                                 semcache=True, semcache_epsilon=0.0),
+            ingest=IngestConfig(
+                policy=CompactionPolicy(max_delta_fraction=None,
+                                        max_dead_fraction=None),
+                min_mutated_rows=10**9, async_compaction=False),
+            executor=StepExecutor(seed=s))
+        gts = {}
+        orig = rt.batcher.execute
+
+        def execute(tickets, staged=None):
+            for t in tickets:  # flush-time oracle for flushed tickets
+                gts[t.query.qid] = rt.view.ground_truth(t.query)
+            return orig(tickets, staged)
+
+        rt.batcher.execute = execute
+        rng = np.random.default_rng(31)
+        # repeats of 3 base queries so hits actually occur between bumps
+        base = make_queries(db, [(0,), (0, 1), (1,)], k=K, seed=27)
+        out = []
+        for i in range(18):
+            q = base[i % 3]
+            qq = type(q)(qid=6000 + i, vid=q.vid, vectors=q.vectors, k=q.k)
+            plan = QueryPlan(qq.qid, [IndexSpec(qq.vid, "flat")], [K],
+                             1.0, 1.0)
+            submit_gt = rt.view.ground_truth(qq)  # oracle at submit time
+            tk = rt.batcher.submit(qq, i * 1e-3, plan=plan)
+            if tk.cache_hit:  # a hit is final at submit: oracle is NOW's
+                gts[qq.qid] = submit_gt
+            out.append(tk)
+            if i % 3 == 2:  # round boundary: admissions land before the
+                rt.drain(i * 1e-3)  # next round's repeats probe
+            if i == 5:
+                rt.insert(row_batch(db, rng, 20))            # epoch bump
+            if i == 9:
+                rt.delete(rng.choice(rt.table.live_ids(), 15,
+                                     replace=False))         # epoch bump
+            if i == 12:
+                rt.compact(reason="mid", now=i * 1e-3)       # generation
+            rt.tick(i * 1e-3)
+        rt.drain(1.0)
+        return rt, out, gts
+
+    rt, got, gts = run(seed)
+    assert rt.semcache.hits > 0 and rt.semcache.invalidations >= 2
+    for t in got:
+        ids = t.ids if t.cache_hit else t.result(timeout=30)
+        np.testing.assert_array_equal(np.asarray(ids), gts[t.query.qid])
+    rt2, got2, _ = run(seed)  # determinism per seed, hits included
+    assert rt2.semcache.hits == rt.semcache.hits
+    for a, b in zip(got, got2):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        assert a.cache_hit == b.cache_hit
+
+
 def test_stale_async_build_is_dropped(db, mint, wl, cons, tuned):
     """A sync fold that lands while an async build is in flight truncates
     the log past the async cut; the late build must be dropped, not

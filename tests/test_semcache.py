@@ -1,0 +1,375 @@
+"""Semantic result cache tests (DESIGN.md §13).
+
+The acceptance property: at ε=0 every cache hit is BIT-IDENTICAL to what
+the uncached engine would have returned for the same submission sequence —
+for every index kind, with predicates attached, and after a compaction
+rebase — and a hit never crosses an invalidation boundary (mutation flush,
+retune/compaction generation bump, tenant swap). Unit tests cover the
+probe/admit state machine (FIFO ring, namespace LRU, host-side float64 ε
+verification) and the governor spill protocol (device matrix dropped under
+pressure, host ring retained, bit-identical re-upload). The slow-marked
+ε-sweep recall grid runs in the nightly lane.
+"""
+from dataclasses import replace as dc_replace
+
+import numpy as np
+import pytest
+
+from repro.core.tuner import Mint
+from repro.core.types import Constraints, IndexSpec, QueryPlan, Workload
+from repro.data.vectors import make_database, make_queries
+from repro.filter import Range
+from repro.filter.attributes import synth_attributes
+from repro.index.registry import IndexStore
+from repro.ingest import CompactionPolicy, IngestConfig, IngestRuntime
+from repro.online import (OnlineRuntime, RuntimeConfig, SemanticCache,
+                          SemCacheConfig, hot_item_trace)
+from repro.online.trace import row_batch
+from repro.serve.columnstore import padded_device_bytes
+from repro.tenancy import MemoryGovernor, MultiTenantRuntime, Tenant
+
+K = 8
+COLS = [("a", 24), ("b", 32)]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_database(400, COLS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl(db):
+    qs = make_queries(db, [(0,), (0, 1), (1,)], k=K, seed=7)
+    return Workload(queries=qs, probs=np.ones(len(qs)))
+
+
+@pytest.fixture(scope="module")
+def cons():
+    return Constraints(theta_recall=0.85, theta_storage=3)
+
+
+def _qp(db, seed, qid, vid=(0, 1)):
+    q = make_queries(db, [vid], k=K, seed=seed)[0]
+    q.qid = qid
+    plan = QueryPlan(q.qid, [IndexSpec(vid, "flat")], [K], 1.0, 1.0)
+    return q, plan
+
+
+# ---- unit: probe/admit state machine ---------------------------------------
+
+
+def test_probe_miss_admit_hit_and_near_miss(db):
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=4))
+    q, plan = _qp(db, seed=1, qid=100)
+    ids0 = np.arange(K, dtype=np.int64)
+    got, token = cache.probe(q, plan)
+    assert got is None and token is not None
+    token.admit(ids0)
+    got, token = cache.probe(q, plan)
+    assert token is None
+    np.testing.assert_array_equal(got, ids0)
+    got[0] = -1  # the returned array is a copy: the store is untouched
+    again, _ = cache.probe(q, plan)
+    assert again[0] == 0
+    # a perturbed vector nominates the neighbor but fails the ε=0 check
+    near = dc_replace(q, qid=101)
+    near.vectors = {v: arr + 1e-3 for v, arr in q.vectors.items()}
+    got, token = cache.probe(near, plan)
+    assert got is None and token is not None
+    st = cache.stats()
+    assert st["hits"] == 2 and st["near_misses"] == 1
+
+
+def test_epsilon_accepts_within_radius(db):
+    cache = SemanticCache(SemCacheConfig(epsilon=0.5, capacity=4))
+    q, plan = _qp(db, seed=2, qid=200)
+    _, token = cache.probe(q, plan)
+    token.admit(np.arange(K, dtype=np.int64))
+    near = dc_replace(q, qid=201)
+    near.vectors = {v: arr + 1e-3 for v, arr in q.vectors.items()}
+    got, _ = cache.probe(near, plan)
+    assert got is not None  # within ε: served from the neighbor's entry
+    far = dc_replace(q, qid=202)
+    far.vectors = {v: arr + 1.0 for v, arr in q.vectors.items()}
+    got, token = cache.probe(far, plan)
+    assert got is None and token is not None
+
+
+def test_fifo_ring_overwrites_oldest(db):
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=2))
+    qps = [_qp(db, seed=10 + i, qid=300 + i) for i in range(3)]
+    for i, (q, plan) in enumerate(qps):
+        _, token = cache.probe(q, plan)
+        token.admit(np.full(K, i, dtype=np.int64))
+    # capacity 2: the first admission was overwritten, the last two live
+    assert cache.probe(*qps[0])[0] is None
+    np.testing.assert_array_equal(cache.probe(*qps[1])[0], np.full(K, 1))
+    np.testing.assert_array_equal(cache.probe(*qps[2])[0], np.full(K, 2))
+    assert cache.stats()["entries"] == 2
+
+
+def test_signature_isolates_k_plan_and_predicate(db):
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=4))
+    q, plan = _qp(db, seed=3, qid=400)
+    _, token = cache.probe(q, plan)
+    token.admit(np.arange(K, dtype=np.int64))
+    assert cache.probe(q, plan)[0] is not None
+    # same vector, different k / different plan / a predicate: all miss
+    qk = dc_replace(q, k=K + 4)
+    assert cache.probe(qk, plan)[0] is None
+    other = QueryPlan(q.qid, [IndexSpec((0, 1), "flat")], [K + 16], 1.0, 1.0)
+    assert cache.probe(q, other)[0] is None
+    qp = dc_replace(q, predicate=Range("score", lo=0.0, hi=0.5))
+    assert cache.probe(qp, plan)[0] is None
+
+
+def test_generation_and_epoch_invalidate(db):
+    gen = {"v": 0}
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=4),
+                          generation=lambda: gen["v"])
+    q, plan = _qp(db, seed=4, qid=500)
+    _, token = cache.probe(q, plan)
+    token.admit(np.arange(K, dtype=np.int64))
+    assert cache.probe(q, plan)[0] is not None
+    gen["v"] += 1  # retune swap / compaction rebase
+    assert cache.probe(q, plan)[0] is None
+    assert cache.stats()["dropped_namespaces"] >= 1
+    _, token = cache.probe(q, plan)
+    token.admit(np.arange(K, dtype=np.int64))
+    assert cache.probe(q, plan)[0] is not None
+    cache.bump()  # mutation flush: data epoch
+    assert cache.probe(q, plan)[0] is None
+    assert cache.stats()["invalidations"] == 1
+
+
+def test_stale_admission_lands_in_current_namespace(db):
+    """A token issued at epoch E admitted after a bump must key into the
+    NEW epoch (its result reflects the flush-time table), not resurrect
+    the dead namespace."""
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=4))
+    q, plan = _qp(db, seed=5, qid=600)
+    _, token = cache.probe(q, plan)
+    cache.bump()
+    token.admit(np.arange(K, dtype=np.int64))
+    got, _ = cache.probe(q, plan)  # current-epoch namespace serves it
+    np.testing.assert_array_equal(got, np.arange(K))
+
+
+def test_namespace_lru_bound(db):
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=2,
+                                         max_namespaces=2))
+    for i in range(3):  # distinct k => distinct namespaces
+        q, plan = _qp(db, seed=6, qid=700 + i)
+        q = dc_replace(q, k=K + i)
+        _, token = cache.probe(q, plan)
+        token.admit(np.arange(q.k, dtype=np.int64))
+    st = cache.stats()
+    assert st["namespaces"] == 2 and st["dropped_namespaces"] == 1
+
+
+def test_governor_charging_spill_and_reupload(db):
+    """Under device pressure the governor spills a namespace's query
+    matrix via evict_device; the host ring is retained so the next probe
+    re-charges, re-uploads, and still hits bit-identically."""
+    cap = 4
+    dim = sum(d for _, d in COLS)
+    ns_bytes = padded_device_bytes(cap, dim)
+    gov = MemoryGovernor(budget_bytes=ns_bytes)  # room for ONE matrix
+    cache = SemanticCache(SemCacheConfig(epsilon=0.0, capacity=cap),
+                          governor=gov, tenant="t")
+    gov.register("t", store=None)
+    gov.register_semcache("t", cache)
+    a, plan_a = _qp(db, seed=7, qid=800)
+    b = dc_replace(a, qid=801, k=K + 1)  # second namespace
+    plan_b = QueryPlan(b.qid, [IndexSpec((0, 1), "flat")], [K], 1.0, 1.0)
+    for q, plan, ids in ((a, plan_a, np.arange(K)),
+                        (b, plan_b, np.arange(K + 1))):
+        _, token = cache.probe(q, plan)
+        token.admit(ids.astype(np.int64))
+    np.testing.assert_array_equal(cache.probe(a, plan_a)[0], np.arange(K))
+    assert gov.total_bytes == ns_bytes  # one matrix resident
+    # probing b forces an acquire that spills a's device copy ...
+    np.testing.assert_array_equal(cache.probe(b, plan_b)[0], np.arange(K + 1))
+    assert gov.evictions >= 1 and gov.total_bytes <= gov.budget_bytes
+    assert gov.overcommits == 0
+    # ... and a's host ring survives: re-upload serves the same answer
+    np.testing.assert_array_equal(cache.probe(a, plan_a)[0], np.arange(K))
+
+
+# ---- integration: ε=0 parity with the uncached engine ----------------------
+
+
+def _parity_runtime(db, mint, wl, cons, tuned, on):
+    return OnlineRuntime(db, mint, wl, cons, result=tuned,
+                         store=IndexStore(db, seed=0),
+                         config=RuntimeConfig(max_batch=4, cooldown_s=1e9,
+                                              drift_threshold=2.0,
+                                              semcache=on,
+                                              semcache_epsilon=0.0))
+
+
+def _two_rounds(rt, qs, qid0=9000):
+    """Submit every query twice (fresh qids, identical vectors), draining
+    between rounds so round 1 is admitted before round 2 probes."""
+    tks = []
+    i = 0
+    for _ in range(2):
+        for q in qs:
+            tks.append(rt.submit(dc_replace(q, qid=qid0 + i), now=i * 1e-3))
+            i += 1
+        rt.drain()
+    return tks
+
+
+@pytest.mark.parametrize("kind", ["flat", "ivf", "hnsw", "diskann"])
+def test_eps0_hits_bit_identical_per_kind(db, wl, cons, kind):
+    """ACCEPTANCE: ε=0 cached hits == the uncached engine, per index kind,
+    and hits bypass the flush entirely."""
+    mint = Mint(db, index_kind=kind, seed=0, min_sample_rows=300)
+    tuned = mint.tune(wl, cons)
+    qs = make_queries(db, [(0,), (0, 1), (1,)] * 2, k=K, seed=21)
+    rt_off = _parity_runtime(db, mint, wl, cons, tuned, on=False)
+    ref = _two_rounds(rt_off, qs)
+    rt_on = _parity_runtime(db, mint, wl, cons, tuned, on=True)
+    got = _two_rounds(rt_on, qs)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    hits = [t for t in got if t.cache_hit]
+    assert len(hits) == len(qs)  # every repeat served from the cache
+    assert all(t.done and t.batch_size == 0 for t in hits)
+    assert rt_on.batcher.stats.cache_hits == len(qs)
+    assert rt_on.batcher.stats.batches < rt_off.batcher.stats.batches
+
+
+def test_eps0_parity_with_filters(db, wl, cons):
+    """Filtered queries key on the predicate AST: repeats hit and match
+    the uncached engine; a different predicate over the same vector does
+    not cross-serve."""
+    attrs = synth_attributes(db.n_rows, seed=3)
+    mint = Mint(db, index_kind="flat", seed=0, min_sample_rows=300,
+                attributes=attrs)
+    tuned = mint.tune(wl, cons)
+    lo = Range("score", lo=0.0, hi=0.6)
+    hi = Range("score", lo=0.4, hi=1.0)
+    base = make_queries(db, [(0, 1)], k=K, seed=22)[0]
+    qs = [dc_replace(base, predicate=lo), dc_replace(base, predicate=hi),
+          dc_replace(base)]
+    rt_off = _parity_runtime(db, mint, wl, cons, tuned, on=False)
+    ref = _two_rounds(rt_off, qs)
+    rt_on = _parity_runtime(db, mint, wl, cons, tuned, on=True)
+    got = _two_rounds(rt_on, qs)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    # three distinct namespaces (lo, hi, unfiltered) — no cross-serving
+    assert rt_on.stats()["semcache"]["namespaces"] == 3
+    assert sum(t.cache_hit for t in got) == len(qs)
+
+
+def test_mutation_and_compaction_invalidate_then_reprime(db, wl, cons):
+    """IngestRuntime: a mutation flush (epoch bump) and a compaction
+    rebase (generation bump) each kill cached entries; post-invalidation
+    queries re-flush against the live table and re-admit — every served
+    result equals the at-that-moment oracle."""
+    mint = Mint(db, index_kind="flat", seed=0, min_sample_rows=300)
+    tuned = mint.tune(wl, cons)
+    rt = IngestRuntime(
+        db, mint, wl, cons, result=tuned,
+        config=RuntimeConfig(max_batch=2, cooldown_s=1e9,
+                             drift_threshold=2.0, semcache=True,
+                             semcache_epsilon=0.0),
+        ingest=IngestConfig(
+            policy=CompactionPolicy(max_delta_fraction=None,
+                                    max_dead_fraction=None),
+            min_mutated_rows=10**9, async_compaction=False))
+    rng = np.random.default_rng(8)
+    q, plan = _qp(db, seed=23, qid=0)
+
+    def ask(qid, now):
+        tk = rt.batcher.submit(dc_replace(q, qid=qid), now, plan=plan)
+        rt.drain(now)
+        np.testing.assert_array_equal(np.asarray(tk.ids),
+                                      rt.view.ground_truth(q))
+        return tk
+
+    assert not ask(9100, 0.1).cache_hit
+    assert ask(9101, 0.2).cache_hit
+    rt.insert(row_batch(db, rng, 20))          # epoch bump
+    tk = ask(9102, 0.3)
+    assert not tk.cache_hit                    # stale entry not served
+    assert ask(9103, 0.4).cache_hit            # re-primed on the new epoch
+    rt.delete(rng.choice(rt.table.live_ids(), 15, replace=False))
+    rt.compact(reason="test", now=0.5)         # generation bump
+    assert not ask(9104, 0.6).cache_hit
+    assert ask(9105, 0.7).cache_hit
+    st = rt.stats()["semcache"]
+    assert st["invalidations"] >= 2 and st["dropped_namespaces"] >= 2
+
+
+def test_tenant_namespaces_isolated_and_swap_scoped(db, wl, cons):
+    """Per-tenant caches: each tenant's repeats hit its OWN namespace;
+    swap_tenant invalidates only the swapped tenant."""
+    mint = Mint(db, index_kind="ivf", seed=0, min_sample_rows=300)
+    tuned = mint.tune(wl, cons)
+    rt = MultiTenantRuntime(
+        [Tenant("A", db, mint, wl, cons, result=tuned),
+         Tenant("B", db, mint, wl, cons, result=tuned)],
+        budget_bytes=256 << 20,
+        config=RuntimeConfig(max_batch=4, cooldown_s=1e9,
+                             drift_threshold=2.0, semcache=True,
+                             semcache_epsilon=0.0))
+    q = make_queries(db, [(0, 1)], k=K, seed=24)[0]
+
+    def ask(tenant, qid, now):
+        tk = rt.submit(tenant, dc_replace(q, qid=qid), now=now)
+        rt.drain(now)
+        return tk
+
+    assert not ask("A", 9200, 0.1).cache_hit   # prime A
+    assert not ask("B", 9201, 0.2).cache_hit   # B's cache is its own: miss
+    a2, b2 = ask("A", 9202, 0.3), ask("B", 9203, 0.4)
+    assert a2.cache_hit and b2.cache_hit
+    np.testing.assert_array_equal(np.asarray(a2.ids), np.asarray(b2.ids))
+    rt.swap_tenant("A", tuned, wl)             # bumps only A's generation
+    assert not ask("A", 9204, 0.5).cache_hit
+    assert ask("B", 9205, 0.6).cache_hit       # B untouched
+    per = rt.stats()["tenants"]
+    assert per["A"]["semcache"]["dropped_namespaces"] >= 1
+    assert per["B"]["semcache"]["dropped_namespaces"] == 0
+    rt.close()
+
+
+# ---- slow lane: ε-sweep recall grid ----------------------------------------
+
+
+@pytest.mark.slow
+def test_eps_sweep_hit_rate_vs_recall(db, wl, cons):
+    """Nightly grid: hit rate grows with ε; at ε=0 every hit is exact
+    (recall of hits == 1 vs the uncached result for the same vector)."""
+    from repro.index.base import exact_topk
+
+    mint = Mint(db, index_kind="flat", seed=0, min_sample_rows=300)
+    tuned = mint.tune(wl, cons)
+    trace = hot_item_trace(db, vid=(0, 1), n=120, n_hot=3, p_hot=0.85,
+                           k=K, seed=25, noise=0.1, qid_start=40_000)
+    rates, recalls = [], []
+    for eps in (0.0, 0.1, 0.3):
+        rt = OnlineRuntime(db, mint, wl, cons, result=tuned,
+                           store=IndexStore(db, seed=0),
+                           config=RuntimeConfig(max_batch=8, cooldown_s=1e9,
+                                                drift_threshold=2.0,
+                                                semcache=True,
+                                                semcache_epsilon=eps))
+        tks = rt.run_trace(trace)
+        hit_recalls = []
+        for t in tks:
+            if not t.cache_hit:
+                continue
+            gt, _ = exact_topk(db.concat(t.query.vid), t.query.concat(), K)
+            inter = set(map(int, np.asarray(t.ids))) & set(map(int, gt))
+            hit_recalls.append(len(inter) / K)
+        rates.append(rt.semcache.hit_rate)
+        recalls.append(float(np.mean(hit_recalls)) if hit_recalls else 1.0)
+    assert rates[0] <= rates[1] <= rates[2]
+    assert rates[2] > rates[0]          # wider ε actually absorbs traffic
+    assert recalls[0] == 1.0            # ε=0 hits are exact
+    assert all(r >= 0.8 for r in recalls)
