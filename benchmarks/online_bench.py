@@ -32,6 +32,8 @@ from repro.core.tuner import Mint
 from repro.data.vectors import make_database, make_queries
 from repro.index.base import exact_topk
 from repro.index.registry import IndexStore
+from repro.launch.obs_report import report as obs_report
+from repro.obs import Histogram
 from repro.online import (OnlineRuntime, RuntimeConfig, burst_trace,
                           diurnal_trace, hot_item_trace, steady_trace,
                           tenant_skew_trace)
@@ -46,7 +48,16 @@ def vid_workload(db, vids, k, seed):
 def window_metrics(tickets, theta_recall) -> dict:
     ms = [t.metrics for t in tickets]
     recalls = np.asarray([m.recall for m in ms])
+    # end-to-end wall wait (submit -> result ready) through the obs
+    # histogram: log-bucketed, so p50/p99 match what the metrics registry
+    # reports for ticket_wall_ms in observer-enabled runs
+    waits = Histogram()
+    for t in tickets:
+        waits.observe(max(t.wall_wait_ms, 0.0))
     return {
+        "mean_wall_wait_ms": waits.mean,
+        "p50_wall_wait_ms": waits.quantile(0.50),
+        "p99_wall_wait_ms": waits.quantile(0.99),
         "queries": len(ms),
         "mean_cost": float(np.mean([m.cost for m in ms])),
         "p50_cost": float(np.percentile([m.cost for m in ms], 50)),
@@ -75,7 +86,7 @@ def run_variant(db, mint, day, cons, result, store, steady, drifted,
     out = {
         "steady_plan_cache": steady_cache,
         "drift_tail": window_metrics(tickets[-n_eval:], cons.theta_recall),
-        "batcher": rt.batcher.stats.as_dict(),
+        "batcher": rt.batcher.snapshot_stats().as_dict(),
         "retunes": [vars(e) for e in rt.retune_events],
         "generation": rt.generation,
         "serving_config": sorted(s.name for s in rt.result.configuration),
@@ -134,7 +145,7 @@ def async_flush_overlap(db, mint, day, cons, result) -> dict:
         tickets = rt.run_trace(trace)
         wall = time.time() - t0
         ids[mode] = [np.asarray(t.result(timeout=60)) for t in tickets]
-        st = rt.batcher.stats
+        st = rt.batcher.snapshot_stats()
         out[mode] = {
             "wall_s": float(wall),
             "queries_per_s": float(len(tickets) / max(wall, 1e-9)),
@@ -262,6 +273,64 @@ def semantic_cache_summary(db, mint, day, cons, result, k) -> dict:
     }
 
 
+def observability_summary(db, mint, day, cons, result, k) -> dict:
+    """Observer-enabled hot-item run (DESIGN.md §14): per-ticket span
+    trees across the async flush boundary, with the acceptance checks —
+    at least one ticket with a COMPLETE stage set
+    (enqueue/semcache_probe/flush_wait/dispatch/merge) whose stage sum is
+    within 10% of end-to-end, async dispatch spans adopted into ticket
+    roots, modeled HBM bytes attached to dispatch — plus a bit-identity
+    check against the observer-disabled run."""
+    trace = hot_item_trace(db, vid=(0,), n=160, qps=2000.0, n_hot=4,
+                           p_hot=0.85, k=k, seed=7, noise=0.1,
+                           qid_start=400_000)
+
+    def run_once(observe):
+        cfg = RuntimeConfig(max_batch=16, max_delay_ms=5.0, window=96,
+                            min_window=48, cooldown_s=1e9,
+                            drift_threshold=2.0, semcache=True,
+                            semcache_epsilon=0.1, async_flush=True,
+                            workers=2, observe=observe)
+        rt = OnlineRuntime(db, mint, day, cons, result=result,
+                           store=IndexStore(db, seed=0), config=cfg)
+        tickets = rt.run_trace(trace)
+        ids = [np.asarray(t.result(timeout=60)) for t in tickets]
+        obs = rt.observer if observe else None
+        rt.close()
+        return ids, obs
+
+    ids_off, _ = run_once(False)
+    ids_on, obs = run_once(True)
+
+    need = {"enqueue", "semcache_probe", "flush_wait", "dispatch", "merge"}
+    complete, covered, hbm_ok = 0, 0, 0
+    for tr in obs.traces:
+        if not need <= tr.stage_names():
+            continue
+        complete += 1
+        if abs(tr.coverage() - 1.0) <= 0.10:
+            covered += 1
+        dsp = tr.find("dispatch")
+        if dsp is not None and dsp.attrs.get("hbm_bytes_modeled", 0.0) > 0:
+            hbm_ok += 1
+    rep = obs_report(obs)
+    return {
+        "trace": {"kind": "hot_item", "n": len(trace)},
+        "tickets_traced": len(obs.traces),
+        "complete_span_trees": complete,
+        "coverage_within_10pct": covered,
+        "dispatch_with_hbm_bytes": hbm_ok,
+        "report": rep,
+        "acceptance": {
+            "complete_span_tree_ge_1": complete >= 1,
+            "stage_sum_within_10pct": covered >= 1 and covered == complete,
+            "hbm_bytes_on_dispatch": hbm_ok == complete,
+            "disabled_bit_identical": bool(all(
+                np.array_equal(a, b) for a, b in zip(ids_off, ids_on))),
+        },
+    }
+
+
 def run(rows: int = 10000, steady_n: int = 120, drift_n: int = 180,
         k: int = 10, out_path: str = "BENCH_online.json") -> dict:
     db = make_database(rows, [("image", 96), ("title", 64),
@@ -307,6 +376,12 @@ def run(rows: int = 10000, steady_n: int = 120, drift_n: int = 180,
         "async_flush": async_flush_overlap(db, mint, day, cons, result),
         "semantic_cache": semantic_cache_summary(db, mint, day, cons,
                                                  result, k),
+        "observability": (obs := observability_summary(db, mint, day, cons,
+                                                       result, k)),
+        # registry snapshot from the observer-enabled run, surfaced
+        # top-level so downstream consumers (auto-tuner, dashboards) don't
+        # dig through the nested report
+        "metrics": obs["report"]["metrics"],
         "drift_tail_cost_ratio_stale_over_retuned":
             stale_cost / max(retuned_cost, 1e-9),
         "acceptance": {
@@ -328,6 +403,7 @@ def run(rows: int = 10000, steady_n: int = 120, drift_n: int = 180,
               f"recall={op['mean_recall']:.3f} "
               f"p99={op['p99_wall_wait_ms']:.2f}ms "
               f"(baseline p99={sc['baseline_no_cache']['p99_wall_wait_ms']:.2f}ms)")
+    print("observability:", json.dumps(out["observability"]["acceptance"]))
     print(f"cost ratio (stale/retuned) on drift tail: "
           f"{out['drift_tail_cost_ratio_stale_over_retuned']:.2f}x")
     return out

@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core.types import Constraints
 from repro.core.tuner import (Mint, execute_workload, ground_truth_cache)
 from repro.data.vectors import make_database, make_workload, naive_database, news_database

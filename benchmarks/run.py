@@ -22,7 +22,8 @@ def main() -> None:
     kernels_bench.run(quick=args.quick, measure=not args.quick)
     # filtered access-path grid -> BENCH_filter.json (nightly artifact)
     filter_bench.run(rows=min(n, 4000), quick=args.quick)
-    # online runtime: drift/retune + semantic cache -> BENCH_online.json
+    # online runtime: drift/retune + semantic cache + observability
+    # (span-tree acceptance, metrics-registry snapshot) -> BENCH_online.json
     online_bench.run(rows=min(n, 4000))
     T.bench_endtoend(n_rows=n, kinds=("hnsw", "diskann"))
     T.bench_storage_sweep(n_rows=n)

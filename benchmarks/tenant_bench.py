@@ -97,7 +97,9 @@ def isolation_experiment(victim, noisy, k, budget_bytes, fair: bool) -> dict:
         "policy": "drr" if fair else "fifo",
         "victim": wait_stats(tickets, "victim"),
         "noisy": wait_stats(tickets, "noisy"),
-        "batcher": st["batcher"],
+        # read-only snapshot (not the live stats object): consistent even
+        # if a worker thread is mid-flush when we read
+        "batcher": rt.batcher.snapshot_stats().as_dict(),
         "governor": st["governor"],
     }
 

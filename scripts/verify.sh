@@ -14,5 +14,10 @@ python -m compileall -q src benchmarks examples tests
 case "${1:-}" in
   --slow) exec python -m pytest -q -m slow ;;
   --full) exec python -m pytest -q -m "" ;;
-  *)      exec python -m pytest -x -q ;;
+  *)
+    python -m pytest -x -q
+    # obs-overhead: observer must be free when disabled, <5%+2ms on p99
+    # when enabled, and bit-identical either way (DESIGN.md §14)
+    python scripts/obs_overhead.py
+    ;;
 esac

@@ -32,9 +32,12 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
+import time
 from typing import Callable
 
 import numpy as np
+
+from repro.obs import NULL_OBSERVER
 
 _PENDING = "pending"
 _RUNNING = "running"
@@ -183,6 +186,32 @@ class FaultInjector:
             raise InjectedCrash(f"label match {self.label_match!r}")
 
 
+def _task_kind(label: str) -> str:
+    """Bounded-cardinality metric label: 'flush:size' -> 'flush',
+    'retune@12.5' -> 'retune'."""
+    return label.split(":", 1)[0].split("@", 1)[0]
+
+
+def _observed_run(obs, task: _Task, hooks) -> None:
+    """Run one task, reporting duration/count (and crash events) through
+    the observer. Executors share this so pool threads and the seeded
+    StepExecutor harness produce the same metric series."""
+    if not obs.enabled:
+        task.run(hooks)
+        return
+    kind = _task_kind(task.future.label)
+    t0 = time.perf_counter()
+    try:
+        task.run(hooks)
+    except InjectedCrash:
+        obs.event("worker_crash", label=task.future.label)
+        raise
+    finally:
+        obs.observe("executor_task_ms", (time.perf_counter() - t0) * 1e3,
+                    kind=kind)
+        obs.counter("executor_tasks", kind=kind)
+
+
 def drive_until(executor, future: Future, timeout: float | None = None) -> bool:
     """Wait for ``future`` to complete. On a caller-driven executor (one
     with a ``drive()`` method, i.e. the StepExecutor harness) this RUNS
@@ -200,8 +229,10 @@ class SerialExecutor:
     """Inline execution at submit — the sync baseline (and the degenerate
     executor for environments without threads)."""
 
-    def __init__(self, hooks: Callable[[str], None] | None = None):
+    def __init__(self, hooks: Callable[[str], None] | None = None,
+                 observer=None):
         self.hooks = hooks
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self.submitted = 0
         self.order: list[str] = []  # labels in execution order
 
@@ -210,7 +241,7 @@ class SerialExecutor:
         self.submitted += 1
         self.order.append(label)
         try:
-            _Task(fn, args, fut).run(self.hooks)
+            _observed_run(self.obs, _Task(fn, args, fut), self.hooks)
         except InjectedCrash:
             pass  # future already failed with WorkerCrashed
         return fut
@@ -228,11 +259,13 @@ class WorkerPool:
     _STOP = object()
 
     def __init__(self, workers: int = 2, max_pending: int | None = 256,
-                 name: str = "pool", hooks: Callable[[str], None] | None = None):
+                 name: str = "pool", hooks: Callable[[str], None] | None = None,
+                 observer=None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.name = name
         self.hooks = hooks
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self._queue: queue.Queue = queue.Queue(maxsize=max_pending or 0)
         self._lock = threading.Lock()
         self._closed = False
@@ -256,7 +289,7 @@ class WorkerPool:
             if item is self._STOP:
                 return
             try:
-                item.run(self.hooks)
+                _observed_run(self.obs, item, self.hooks)
             except InjectedCrash:
                 # this worker is "dead": replace it so capacity survives a
                 # crash, unless the pool is already shutting down
@@ -362,10 +395,12 @@ class StepExecutor:
     caller serializes memory effects while still permuting that order."""
 
     def __init__(self, seed: int | None = None,
-                 hooks: Callable[[str], None] | None = None):
+                 hooks: Callable[[str], None] | None = None,
+                 observer=None):
         self.rng = np.random.default_rng(seed)
         self.seeded = seed is not None
         self.hooks = hooks
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self._pending: list[_Task] = []
         self._closed = False
         self.ran: list[str] = []  # labels in the order they executed
@@ -393,7 +428,7 @@ class StepExecutor:
             raise IndexError("StepExecutor: nothing pending")
         task = self._pick(index)
         try:
-            task.run(self.hooks)
+            _observed_run(self.obs, task, self.hooks)
         except InjectedCrash:
             pass
         self.ran.append(task.future.label)
@@ -423,6 +458,7 @@ class StepExecutor:
         task.future._set_running()
         task.future.set_exception(
             WorkerCrashed(f"{task.future.label}: worker crashed (injected)"))
+        self.obs.event("worker_crash", label=task.future.label)
         self.ran.append(task.future.label)
         return task.future
 

@@ -7,7 +7,7 @@ builds ShapeDtypeStruct stand-ins for the dry-run (no allocation).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

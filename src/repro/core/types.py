@@ -8,7 +8,6 @@ Terminology follows the paper (MINT, CS.DB 2025):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Iterable
 

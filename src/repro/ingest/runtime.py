@@ -256,8 +256,14 @@ class IngestRuntime(OnlineRuntime):
         now = time.time() if now is None else now
         t0 = time.time()
         with self.batcher.lock:
+            self.observer.event("compaction_cut", reason=reason, mode="sync")
             state = self.compactor.build(self.result.configuration,
                                          reason=reason)
+            self.observer.event("compaction_build", reason=reason,
+                                mode="sync",
+                                build_seconds=state.stats.build_seconds,
+                                rows_after=state.stats.rows_after,
+                                specs_rebuilt=state.stats.specs_rebuilt)
             self.batcher.drain(now)
             with self._swap_lock:
                 replayed = self._install_compaction(state)
@@ -265,6 +271,9 @@ class IngestRuntime(OnlineRuntime):
                                     replayed=replayed,
                                     stall_s=time.time() - t0)
         self.compaction_events.append(ev)
+        self.observer.event("compaction_rebase", reason=reason, mode="sync",
+                            generation=ev.generation, replayed=ev.replayed,
+                            stall_s=ev.stall_s)
         return ev
 
     def compact_async(self, reason: str = "manual", now: float | None = None):
@@ -280,13 +289,25 @@ class IngestRuntime(OnlineRuntime):
         with self.batcher.lock:  # pin configuration vs a concurrent swap
             cut = self.compactor.cut()
             configuration = self.result.configuration
+        self.observer.event("compaction_cut", reason=reason, mode="async",
+                            upto_lsn=cut.upto_lsn)
         return builds.submit(
             "compact",
-            lambda: self.compactor.build_from(cut, configuration,
-                                              reason=reason),
+            lambda: self._build_compaction(cut, configuration, reason),
             finalize=lambda state, t: self._finish_compaction(
                 state, reason, now if t is None else t),
             label=f"compact:{reason}", now=now)
+
+    def _build_compaction(self, cut, configuration, reason: str):
+        """Worker-side shadow build; the build event is recorded on the
+        worker thread — the timeline ring is thread-safe, and the event's
+        monotonic stamp interleaves correctly with serving-side spans."""
+        state = self.compactor.build_from(cut, configuration, reason=reason)
+        self.observer.event("compaction_build", reason=reason, mode="async",
+                            build_seconds=state.stats.build_seconds,
+                            rows_after=state.stats.rows_after,
+                            specs_rebuilt=state.stats.specs_rebuilt)
+        return state
 
     def _finish_compaction(self, state, reason: str,
                            now: float) -> CompactionEvent | None:
@@ -302,6 +323,8 @@ class IngestRuntime(OnlineRuntime):
         with self.batcher.lock:
             if state.stats.upto_lsn < self.table.log.truncated_upto:
                 self.stale_async_builds += 1
+                self.observer.event("compaction_stale_drop", reason=reason,
+                                    upto_lsn=state.stats.upto_lsn)
                 return None
             self.batcher.drain(now)
             with self._swap_lock:
@@ -310,6 +333,9 @@ class IngestRuntime(OnlineRuntime):
                                     replayed=replayed,
                                     stall_s=time.time() - t0)
         self.compaction_events.append(ev)
+        self.observer.event("compaction_rebase", reason=reason, mode="async",
+                            generation=ev.generation, replayed=ev.replayed,
+                            stall_s=ev.stall_s)
         return ev
 
     def _compaction_event(self, state, reason: str, now: float, mode: str,
@@ -351,6 +377,9 @@ class IngestRuntime(OnlineRuntime):
         retune — the data-side analogue of the query-drift lifecycle."""
         now = time.time() if now is None else now
         self._last_data_fire = now
+        self.observer.event("data_drift", reason=report.reason or "",
+                            churn=report.churn_fraction,
+                            shift=report.max_shift)
         t0 = time.time()
         with self.batcher.lock:
             config_before = len(self.result.configuration)
@@ -386,6 +415,8 @@ class IngestRuntime(OnlineRuntime):
             est_cost_after=float(result.est_workload_cost),
             tune_seconds=time.time() - t0)
         self.data_retune_events.append(ev)
+        self.observer.event("data_retune_swap", generation=ev.generation,
+                            reason=ev.reason, tune_seconds=ev.tune_seconds)
         return ev
 
     # ---- introspection ----------------------------------------------------

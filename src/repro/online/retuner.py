@@ -26,6 +26,7 @@ import time
 from dataclasses import dataclass
 
 from repro.async_.coordinator import BuildCoordinator
+from repro.obs import NULL_OBSERVER
 
 _RETUNE_KEY = "retune"
 
@@ -64,6 +65,12 @@ class BackgroundRetuner:
         self.builds = BuildCoordinator(executor) if mode == "pool" else None
 
     @property
+    def obs(self):
+        # the runtime owns the observer; proxies (tenant retune views)
+        # forward it, and anything without one gets the no-op
+        return getattr(self.runtime, "observer", NULL_OBSERVER)
+
+    @property
     def inflight(self) -> bool:
         if self.builds is not None and self.builds.inflight(_RETUNE_KEY):
             return True
@@ -91,6 +98,8 @@ class BackgroundRetuner:
         report = self.runtime.detector.check(self.runtime.monitor)
         if not report.drifted:
             return None
+        self.obs.event("drift_detected", drift=float(report.drift),
+                       window=len(self.runtime.monitor), fired_at=now)
         self._last_fire = now
         if self.mode == "thread":
             self._worker = threading.Thread(
@@ -168,6 +177,10 @@ class BackgroundRetuner:
             built=tuned["built"], dropped=dropped,
             tune_seconds=tuned["tune_seconds"])
         self.events.append(event)
+        self.obs.event("retune_swap", generation=event.generation,
+                       drift=event.drift, built=event.built,
+                       dropped=event.dropped,
+                       tune_seconds=event.tune_seconds)
         return event
 
     def _retune(self, now: float, drift: float) -> RetuneEvent:

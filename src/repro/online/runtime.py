@@ -22,6 +22,7 @@ from dataclasses import dataclass
 from repro.async_.executor import WorkerPool
 from repro.core.types import Constraints, Query, QueryPlan, TuningResult, Workload
 from repro.index.registry import IndexStore
+from repro.obs import NULL_OBSERVER, Observer
 from repro.online.monitor import (DriftDetector, WorkloadMonitor,
                                   reference_histogram)
 from repro.online.plancache import PlanCache, constraints_fingerprint
@@ -61,6 +62,12 @@ class RuntimeConfig:
     semcache_epsilon: float = 0.0
     semcache_capacity: int = 256     # entries per namespace ring
     semcache_namespaces: int = 32    # live namespaces per tenant
+    # observability (DESIGN.md §14): True builds an obs.Observer and
+    # threads it through scheduler/engine/semcache/pool — per-ticket span
+    # trees, a metrics registry, and the runtime timeline. False (default)
+    # leaves the no-op NULL_OBSERVER in place: zero allocations on the hot
+    # path and bit-identical results.
+    observe: bool = False
 
 
 class OnlineRuntime:
@@ -71,11 +78,16 @@ class OnlineRuntime:
                  store: IndexStore | None = None,
                  engine: BatchEngine | None = None,
                  config: RuntimeConfig | None = None,
-                 executor=None):
+                 executor=None, observer=None):
         self.db = db
         self.mint = mint
         self.constraints = constraints
         self.config = config or RuntimeConfig()
+        # observability seam: an injected Observer wins; else config.observe
+        # builds one; else the shared no-op. Created before the executor so
+        # an owned pool reports task timings through it.
+        self.observer = observer if observer is not None else \
+            (Observer() if self.config.observe else NULL_OBSERVER)
         # one executor serves BOTH async flushes and background builds
         # (retunes, compactions); tests inject a StepExecutor here
         self.executor = executor
@@ -84,9 +96,12 @@ class OnlineRuntime:
             self._ensure_executor()
         self.result = result if result is not None else mint.tune(workload, constraints)
         self.store = store or IndexStore(db, seed=mint.seed)
-        self.engine = engine or BatchEngine(db, store=self.store)
+        self.engine = engine or BatchEngine(db, store=self.store,
+                                            observer=self.observer)
         if self.engine.store is not self.store:
             self.engine.swap_store(self.store)
+        if self.observer.enabled:
+            self.engine.obs = self.observer  # injected engines report too
         if getattr(mint, "attributes", None) is not None:
             # filtered serving: the engine needs the attribute store for
             # keep bitmaps, and shares the tuner's selectivity estimator
@@ -113,12 +128,14 @@ class OnlineRuntime:
                                capacity=self.config.semcache_capacity,
                                max_namespaces=self.config.semcache_namespaces),
                 scan=self.engine.cache_probe,
-                generation=lambda: self.cache.generation)
+                generation=lambda: self.cache.generation,
+                observer=self.observer)
         self.batcher = MicroBatcher(self._execute, self.plan_for,
                                     max_batch=self.config.max_batch,
                                     max_delay_ms=self.config.max_delay_ms,
                                     executor=flush_exec, stage=stage,
-                                    semcache=self.semcache)
+                                    semcache=self.semcache,
+                                    observer=self.observer)
         self._swap_lock = threading.Lock()
 
     # ---- request path -----------------------------------------------------
@@ -198,6 +215,8 @@ class OnlineRuntime:
                 # indexes stay); engine.swap_store exists for replacing the
                 # store/column-store wholesale, e.g. after data mutations
                 dropped = len(self.store.prune(result.configuration))
+        self.observer.event("swap", generation=self.cache.generation,
+                            dropped=dropped)
         return dropped
 
     @property
@@ -209,12 +228,14 @@ class OnlineRuntime:
         return self.retuner.events
 
     def stats(self) -> dict:
-        # surface plan-cache LRU pressure in the scheduler stats snapshot
-        self.batcher.stats.plan_evictions = self.cache.evictions
-        return {
+        # read-only batcher snapshot (the live object stays untouched);
+        # plan-cache LRU pressure rides the snapshot, not the live stats
+        batcher = self.batcher.snapshot_stats()
+        batcher.plan_evictions = self.cache.evictions
+        out = {
             "generation": self.generation,
             "plan_cache": self.cache.stats(),
-            "batcher": self.batcher.stats.as_dict(),
+            "batcher": batcher.as_dict(),
             "semcache": (self.semcache.stats()
                          if self.semcache is not None else None),
             "dispatches": self.engine.counters.as_dict(),
@@ -224,6 +245,9 @@ class OnlineRuntime:
             "drift": self.detector.check(self.monitor).drift,
             "retunes": len(self.retuner.events),
         }
+        if self.observer.enabled:
+            out["metrics"] = self.observer.metrics.snapshot().as_dict()
+        return out
 
     # ---- execution --------------------------------------------------------
 
@@ -233,8 +257,11 @@ class OnlineRuntime:
         need async BUILDS (e.g. async compaction with sync flush)."""
         if self.executor is None:
             self.executor = WorkerPool(workers=self.config.workers,
-                                       name=name)
+                                       name=name, observer=self.observer)
             self._own_executor = True
+        elif self.observer.enabled:
+            # injected executor (tests: StepExecutor) joins the seam too
+            self.executor.obs = self.observer
         return self.executor
 
     def close(self) -> None:

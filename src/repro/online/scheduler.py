@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.async_.executor import drive_until
 from repro.core.types import DEFAULT_TENANT, Query, QueryPlan, TenantId
+from repro.obs import NULL_OBSERVER
 
 
 @dataclass
@@ -72,6 +73,7 @@ class Ticket:
     t_done_wall: float | None = None
     cache_hit: bool = False        # served by the semantic cache, no flush
     cache_token: object | None = None  # semcache AdmissionToken on a miss
+    trace: object | None = None    # obs.Trace when the observer is enabled
 
     @property
     def done(self) -> bool:
@@ -125,6 +127,12 @@ class BatcherStats:
     def mean_batch(self) -> float:
         return self.queries / self.batches if self.batches else 0.0
 
+    def copy(self) -> "BatcherStats":
+        out = BatcherStats(**{k: v for k, v in vars(self).items()
+                              if k != "tenant_queries"})
+        out.tenant_queries = dict(self.tenant_queries)
+        return out
+
     def as_dict(self) -> dict:
         return {"batches": self.batches, "queries": self.queries,
                 "mean_batch": self.mean_batch, "flush_size": self.flush_size,
@@ -166,7 +174,7 @@ class MicroBatcher:
                  quantum: int = 1, fair: bool = True,
                  auto_flush: bool = True, executor=None,
                  stage: Callable[[list[Ticket]], object] | None = None,
-                 semcache=None):
+                 semcache=None, observer=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if quantum < 1:
@@ -191,6 +199,13 @@ class MicroBatcher:
         # their flush lands. Single-tenant: a SemanticCache; multi-tenant:
         # a TenantSemCaches router (tokens bind to the owning cache).
         self.semcache = semcache
+        # observability seam (DESIGN.md §14): NULL_OBSERVER is a no-op and
+        # every allocation below is guarded by ``obs.enabled``, so the
+        # disabled mode costs one attribute read per site and changes no
+        # behavior. Ticket traces are created here at submit; the shared
+        # dispatch/merge spans of a flush are adopted into every served
+        # ticket's tree (async: built on the worker thread, parented back).
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self._inflight: list[_FlushJob] = []
         self.stats = BatcherStats()
         self._queues: dict[TenantId, deque[Ticket]] = {}
@@ -221,13 +236,31 @@ class MicroBatcher:
         now = time.time() if now is None else now
         t_wall = time.time()  # arrival stamp BEFORE the lock: a submitter
         # blocked behind a stop-the-world hold is measured as waiting
+        obs = self.obs
+        t_sub = time.perf_counter() if obs.enabled else 0.0
         with self.lock:
+            t_plan1 = t_sub
             if plan is None:
                 plan = self.plan_for(query)
+                if obs.enabled:
+                    t_plan1 = time.perf_counter()
             ticket = Ticket(query=query, plan=plan, t_submit=now,
                             tenant=tenant, t_submit_wall=t_wall)
+            if obs.enabled:
+                ticket.trace = obs.begin_trace(
+                    "ticket", t0=t_sub, qid=query.qid, tenant=str(tenant))
+                obs.counter("tickets_submitted", tenant=str(tenant))
             if self.semcache is not None:
+                t_p0 = time.perf_counter() if obs.enabled else 0.0
                 ids, token = self.semcache.probe(query, plan, tenant)
+                if obs.enabled:
+                    t_p1 = time.perf_counter()
+                    root = ticket.trace.root
+                    esp = obs.span_at("enqueue", t_sub, t_p0, parent=root)
+                    if t_plan1 > t_sub:  # plan-cache lookup nests in enqueue
+                        obs.span_at("plan_cache", t_sub, t_plan1, parent=esp)
+                    obs.span_at("semcache_probe", t_p0, t_p1, parent=root,
+                                hit=ids is not None)
                 if ids is not None:  # hit: complete now, bypass the flush
                     self.stats.cache_hits += 1
                     ticket.ids = ids
@@ -235,10 +268,24 @@ class MicroBatcher:
                     ticket.flushed = True
                     ticket.t_done = now
                     ticket.t_done_wall = time.time()
+                    if obs.enabled:
+                        obs.counter("semcache_hits", tenant=str(tenant))
+                        obs.end_trace(ticket.trace)
+                        obs.observe("ticket_wall_ms", ticket.wall_wait_ms,
+                                    tenant=str(tenant))
                     return ticket
                 if token is not None:
                     self.stats.cache_misses += 1
                     ticket.cache_token = token
+            elif obs.enabled:
+                esp = obs.span_at("enqueue", t_sub, time.perf_counter(),
+                                  parent=ticket.trace.root)
+                if t_plan1 > t_sub:
+                    obs.span_at("plan_cache", t_sub, t_plan1, parent=esp)
+            if obs.enabled:
+                # flush_wait opens here; _finish_batch closes it when the
+                # ticket's flush starts executing
+                ticket.trace.marks["enqueued"] = time.perf_counter()
             q = self._queues.get(tenant)
             if q is None:
                 q = self._queues[tenant] = deque()
@@ -295,6 +342,22 @@ class MicroBatcher:
 
     def inflight(self) -> int:
         return len(self._inflight)
+
+    def snapshot_stats(self) -> BatcherStats:
+        """Read-only copy of the counters. Mutating the returned object
+        does NOT touch the live stats — use :meth:`reset_stats` to zero
+        them (benches that window their measurements must snapshot, then
+        reset, instead of resetting inside the read — the old read-and-
+        reset pattern dropped counts raced in between)."""
+        with self.lock:
+            return self.stats.copy()
+
+    def reset_stats(self) -> BatcherStats:
+        """Zero the live counters; returns the final pre-reset snapshot."""
+        with self.lock:
+            out = self.stats.copy()
+            self.stats = BatcherStats()
+            return out
 
     # ---- internals (caller must hold ``self.lock``) -----------------------
 
@@ -357,8 +420,11 @@ class MicroBatcher:
         self.stats.queries += len(batch)
         setattr(self.stats, f"flush_{reason}",
                 getattr(self.stats, f"flush_{reason}") + 1)
+        if self.obs.enabled:
+            self.obs.counter("flushes", reason=reason)
+            self.obs.observe("flush_batch", float(len(batch)))
         if self.executor is None:
-            self._apply_results(batch, self.execute(batch), now)
+            self._execute_batch(batch, None, now, pass_staged=False)
             return batch
         job = _FlushJob(tickets=batch, now=now)
         if self.stage is not None:
@@ -376,12 +442,46 @@ class MicroBatcher:
     def _run_job(self, job: _FlushJob) -> int:
         """Worker-side flush execution. Touches only the job's own tickets;
         needs no batcher lock (drain may hold it while waiting on us)."""
-        if self.stage is not None:
-            results = self.execute(job.tickets, job.staged)
-        else:
-            results = self.execute(job.tickets)
-        self._apply_results(job.tickets, results, job.now)
+        self._execute_batch(job.tickets, job.staged, job.now,
+                            pass_staged=self.stage is not None)
         return len(job.tickets)
+
+    def _execute_batch(self, tickets: list[Ticket], staged, now: float,
+                       pass_staged: bool) -> None:
+        """Run + apply one selected batch (sync: submitting thread; async:
+        worker thread). When observing, the batch gets ONE dispatch span
+        and ONE merge span, built on whichever thread executes and adopted
+        by reference into every served ticket's tree — that is how async
+        flush spans parent back to the tickets they serve. The dispatch
+        span is pushed as this thread's current span, so the engine's
+        plan-group spans (with modeled HBM bytes) nest under it."""
+        obs = self.obs
+        if not obs.enabled:
+            results = self.execute(tickets, staged) if pass_staged \
+                else self.execute(tickets)
+            self._apply_results(tickets, results, now)
+            return
+        t_x0 = time.perf_counter()
+        with obs.span("dispatch", t0=t_x0, batch=len(tickets)) as dsp:
+            results = self.execute(tickets, staged) if pass_staged \
+                else self.execute(tickets)
+        t_x1 = dsp.t1
+        self._apply_results(tickets, results, now)
+        t_x2 = time.perf_counter()
+        msp = obs.span_at("merge", t_x1, t_x2, batch=len(tickets))
+        obs.observe("dispatch_ms", (t_x1 - t_x0) * 1e3)
+        for ticket in tickets:
+            trace = ticket.trace
+            if trace is None:
+                continue
+            t_enq = trace.marks.get("enqueued", t_x0)
+            obs.span_at("flush_wait", t_enq, t_x0, parent=trace.root)
+            trace.root.add(dsp)
+            trace.root.add(msp)
+            obs.end_trace(trace, t=t_x2)
+            tenant = str(ticket.tenant)
+            obs.observe("ticket_wall_ms", ticket.wall_wait_ms, tenant=tenant)
+            obs.observe("flush_wait_ms", (t_x0 - t_enq) * 1e3, tenant=tenant)
 
     def _apply_results(self, batch: list[Ticket], results: list,
                        now: float) -> None:

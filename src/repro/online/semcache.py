@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import DEFAULT_TENANT, Query, QueryPlan, TenantId
+from repro.obs import NULL_OBSERVER
 from repro.serve.columnstore import padded_device_bytes
 from repro.serve.engine import cache_probe_scan
 
@@ -127,8 +128,10 @@ class SemanticCache:
 
     def __init__(self, config: SemCacheConfig | None = None, *,
                  scan=None, generation=None, governor=None,
-                 tenant: TenantId = DEFAULT_TENANT, interpret: bool | None = None):
+                 tenant: TenantId = DEFAULT_TENANT, interpret: bool | None = None,
+                 observer=None):
         self.config = config or SemCacheConfig()
+        self.obs = observer if observer is not None else NULL_OBSERVER
         if self.config.capacity < 1:
             raise ValueError("semcache capacity must be >= 1")
         self._interpret = interpret
@@ -227,6 +230,8 @@ class SemanticCache:
             self.epoch += 1
             self.invalidations += 1
             self._sweep()
+        self.obs.event("semcache_invalidate", tenant=str(self.tenant),
+                       epoch=self.epoch)
 
     def invalidate(self) -> None:
         """Drop everything (epoch bump + eager sweep)."""

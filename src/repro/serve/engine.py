@@ -88,8 +88,10 @@ from repro.kernels.distance.kernel import batched_scores
 from repro.kernels.distance.ops import fused_scan
 from repro.kernels.streaming.ops import streaming_fused_scan
 from repro.kernels.topk.kernel import NEG_INF
+from repro.launch.roofline import modeled_scan_bytes
+from repro.obs import NULL_OBSERVER
 from repro.serve.columnstore import ColumnStore, DeviceColumn
-from repro.serve.compiler import PlanGroup, compile_batch, ek_bucket
+from repro.serve.compiler import PlanGroup, compile_batch
 
 # scores below this are masked tombstones / padding — never real candidates
 _DEAD_CUT = NEG_INF / 2
@@ -229,8 +231,12 @@ class BatchEngine:
     def __init__(self, db: MultiVectorDatabase, store=None,
                  cstore: ColumnStore | None = None, mesh=None,
                  axis: str = "data", interpret: bool | None = None,
-                 streaming: bool | None = None):
+                 streaming: bool | None = None, observer=None):
         self.db = db
+        # observability (DESIGN.md §14): plan-group spans with modeled HBM
+        # bytes nest under whatever span is current on the executing thread
+        # (the scheduler's dispatch span); NULL_OBSERVER keeps this free
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self.store = store
         self.mesh = mesh if mesh is not None else (cstore.mesh if cstore else None)
         self.axis = axis
@@ -354,7 +360,7 @@ class BatchEngine:
         out: list[np.ndarray | None] = [None] * len(pairs)
         groups, sqs = self._staged_groups(pairs, staged)
         for group, sq in zip(groups, sqs):
-            ids_list, _, _, _ = self._run_group(group, sq=sq)
+            ids_list, _, _, _ = self._observed_group(group, sq)
             for item, ids in zip(group.items, ids_list):
                 out[item.pos] = ids
         return out  # type: ignore[return-value]
@@ -368,7 +374,7 @@ class BatchEngine:
         groups, sqs = self._staged_groups(pairs, staged)
         for group, sq in zip(groups, sqs):
             t0 = time.time()
-            ids_list, costs, ndists, eks_maps = self._run_group(group, sq=sq)
+            ids_list, costs, ndists, eks_maps = self._observed_group(group, sq)
             gts = self._group_ground_truth(group, gt_cache)
             wall = (time.time() - t0) * 1e3 / max(group.batch, 1)
             for item, ids, cost, nd, eks, gt in zip(
@@ -402,6 +408,61 @@ class BatchEngine:
         return ids_list[0], costs[0]
 
     # ---- group execution --------------------------------------------------
+
+    def _observed_group(self, group: PlanGroup, sq: dict | None = None):
+        """``_run_group`` wrapped in a ``plan_group`` span carrying the
+        kernel-level attribution: plan signature, index kinds, batch size,
+        and modeled HBM bytes (launch/roofline). The span parents to the
+        thread's current span — the scheduler's dispatch span when a flush
+        is executing — which accumulates the group bytes, so a ticket's
+        dispatch span totals the modeled bandwidth cost of its batch."""
+        if not self.obs.enabled:
+            return self._run_group(group, sq=sq)
+        attrs = self._group_attrs(group)
+        with self.obs.span("plan_group", **attrs):
+            out = self._run_group(group, sq=sq)
+        self.obs.counter("plan_groups")
+        parent = self.obs.current()
+        if parent is not None:
+            parent.attrs["hbm_bytes_modeled"] = \
+                parent.attrs.get("hbm_bytes_modeled", 0.0) + \
+                attrs["hbm_bytes_modeled"]
+        return out
+
+    def _group_attrs(self, group: PlanGroup) -> dict:
+        """Host-metadata-only attribution (never touches device state):
+        the modeled bytes reuse ``modeled_scan_bytes`` with the group's
+        batch, the table's row count, and each scanned column's width —
+        streaming vs two-pass follows the engine's active scan path."""
+        B = len(group.items)
+        N = int(self.db.n_rows)
+        side = "streaming_bytes" if self.streaming else "twopass_bytes"
+        kinds: list[str] = []
+        plansig: list[tuple] = []
+        hbm = 0.0
+        if not group.specs:  # flat plan: one scan of the concat column
+            kinds.append("flat")
+            plansig.append(("flat", group.key.vid, group.max_k))
+            d = int(self.db.dim(group.key.vid))
+            hbm += modeled_scan_bytes(B, N, d, min(group.max_k, N))[side]
+        for spec, bucket in zip(group.specs, group.buckets):
+            kind = spec.kind if self.store is not None else "flat"
+            kinds.append(kind)
+            plansig.append((kind, spec.vid, int(bucket)))
+            d = int(self.db.dim(spec.vid))
+            k_eff = min(int(bucket), N)
+            m = modeled_scan_bytes(B, N, d, k_eff)
+            if kind == "flat":
+                hbm += m[side]
+            elif kind == "ivf":
+                # centroid pass + gathered probe-union scan: the streaming
+                # model at probe depth is the closest single-number proxy
+                hbm += m["streaming_bytes"]
+            else:  # graph walks gather per-visit candidate blocks
+                hbm += float(B * k_eff * d * 4)
+        return {"plan_sig": tuple(plansig), "index_kinds": tuple(kinds),
+                "access": group.key.access, "batch": B, "rows": N,
+                "hbm_bytes_modeled": float(hbm)}
 
     def _run_group(self, group: PlanGroup, sq: dict | None = None):
         if group.key.pred is not None:
@@ -1084,6 +1145,7 @@ class BatchEngine:
         nonempty = [u for u in unions if u.shape[0]]
         if not nonempty:
             return [np.empty(0, np.int64) for _ in items]
+        t_r0 = time.perf_counter() if self.obs.enabled else 0.0
         gunion = np.unique(np.concatenate(nonempty))
         qmat = self._staged_qmat(sq, "rerank", col)
         if qmat is None:
@@ -1095,6 +1157,10 @@ class BatchEngine:
         else:
             scores = self._mv_union_scores(mv, group, col, qmat, gunion)
         self.counters.rerank += 1
+        if self.obs.enabled:
+            self.obs.span_at("rerank", t_r0, time.perf_counter(),
+                             parent=self.obs.current(), batch=len(items),
+                             union=int(gunion.shape[0]))
         out = []
         for i, it in enumerate(items):
             if unions[i].shape[0] == 0:

@@ -27,6 +27,7 @@ import threading
 from collections import OrderedDict
 
 from repro.core.types import TenantId, Vid
+from repro.obs import NULL_OBSERVER
 
 _Key = tuple  # (TenantId, Vid)
 
@@ -34,9 +35,11 @@ _Key = tuple  # (TenantId, Vid)
 class MemoryGovernor:
     """LRU device-byte accountant shared by every tenant's column store."""
 
-    def __init__(self, budget_bytes: int, default_quota_bytes: int | None = None):
+    def __init__(self, budget_bytes: int, default_quota_bytes: int | None = None,
+                 observer=None):
         if budget_bytes <= 0:
             raise ValueError("budget_bytes must be positive")
+        self.obs = observer if observer is not None else NULL_OBSERVER
         self.budget_bytes = int(budget_bytes)
         self.default_quota_bytes = default_quota_bytes
         self._stores: dict[TenantId, object] = {}   # tenant -> column store
@@ -120,11 +123,15 @@ class MemoryGovernor:
                     victims=lambda: [k for k in self._lru if k[0] == tenant])
                 if self._tenant_bytes.get(tenant, 0) + nbytes > quota:
                     self.overcommits += 1  # single column above quota
+                    self.obs.event("governor_overcommit", scope="quota",
+                                   tenant=str(tenant), nbytes=nbytes)
             self._evict_until(
                 lambda: self.total_bytes + nbytes <= self.budget_bytes,
                 victims=lambda: list(self._lru))
             if self.total_bytes + nbytes > self.budget_bytes:
                 self.overcommits += 1  # single column above the budget
+                self.obs.event("governor_overcommit", scope="budget",
+                               tenant=str(tenant), nbytes=nbytes)
             self._lru[key] = nbytes
             self._tenant_bytes[tenant] = self._tenant_bytes.get(tenant, 0) + nbytes
             self.total_bytes += nbytes
@@ -170,6 +177,15 @@ class MemoryGovernor:
         else:
             store = self._stores.get(tenant)
         self.evictions += 1
+        if self.obs.enabled:
+            kind = vid[0] if vid and vid[0] in ("delta", "semcache") \
+                else "column"
+            self.obs.event("governor_evict", tenant=str(tenant),
+                           vid=str(vid), kind=kind,
+                           nbytes=self._lru.get((tenant, vid), 0),
+                           total_bytes=self.total_bytes)
+            self.obs.counter("governor_evictions", tenant=str(tenant),
+                             kind=kind)
         if store is not None:
             # evict_device() reports back through release(); RLock makes the
             # nested accounting update safe.

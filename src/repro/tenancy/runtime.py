@@ -34,6 +34,7 @@ from repro.ingest.compactor import (CompactionPolicy, CompactionStats,
 from repro.ingest.delta import MutationView
 from repro.ingest.drift import DataDriftDetector
 from repro.ingest.table import MutableTable
+from repro.obs import NULL_OBSERVER, Observer
 from repro.online.monitor import (DriftDetector, WorkloadMonitor,
                                   reference_histogram)
 from repro.online.plancache import PlanCache, constraints_fingerprint
@@ -75,7 +76,8 @@ class _TenantState:
         self.store = runtime.istores.register(
             spec.tenant_id, spec.db, seed=spec.mint.seed)
         self.engine = BatchEngine(spec.db, store=self.store,
-                                  cstore=self.cstore)
+                                  cstore=self.cstore,
+                                  observer=runtime.observer)
         # ingest state (enable_ingest): per-tenant mutation stream
         self.table: MutableTable | None = None
         self.view: MutationView | None = None
@@ -131,6 +133,10 @@ class _TenantRetuneProxy:
         return self._rt.state(self._tenant)
 
     @property
+    def observer(self):
+        return self._rt.observer
+
+    @property
     def db(self):
         return self._state.spec.db
 
@@ -162,16 +168,21 @@ class MultiTenantRuntime:
                  config: RuntimeConfig | None = None,
                  plan_cache_capacity: int | None = None,
                  fair: bool = True, auto_flush: bool = True,
-                 quantum: int = 1, executor=None):
+                 quantum: int = 1, executor=None, observer=None):
         if not tenants:
             raise ValueError("need at least one tenant")
         self.config = config or RuntimeConfig()
+        # observability seam (DESIGN.md §14): shared across every tenant's
+        # engine/semcache and the governor, so cross-tenant interference
+        # (spills, DRR waits) lands in ONE timeline with tenant labels
+        self.observer = observer if observer is not None else \
+            (Observer() if self.config.observe else NULL_OBSERVER)
         # shared pool: async flushes + every tenant's background retunes
         self.executor = executor
         self._own_executor = False
         if self.executor is None and self.config.async_flush:
             self._ensure_executor()
-        self.governor = MemoryGovernor(budget_bytes)
+        self.governor = MemoryGovernor(budget_bytes, observer=self.observer)
         self.cstores = TenantColumnStores(self.governor)
         self.istores = TenantIndexStores()
         # explicit capacity wins; otherwise the RuntimeConfig default keeps
@@ -201,7 +212,8 @@ class MultiTenantRuntime:
                     scan=st.engine.cache_probe,
                     generation=(lambda t=spec.tenant_id:
                                 self.cache.generation_of(t)),
-                    governor=self.governor, tenant=spec.tenant_id)
+                    governor=self.governor, tenant=spec.tenant_id,
+                    observer=self.observer)
                 self.semcaches[spec.tenant_id] = cache
                 self.governor.register_semcache(spec.tenant_id, cache)
         flush_exec = self.executor if self.config.async_flush else None
@@ -212,12 +224,14 @@ class MultiTenantRuntime:
                                     auto_flush=auto_flush,
                                     executor=flush_exec,
                                     semcache=(TenantSemCaches(self.semcaches)
-                                              if self.semcaches else None))
+                                              if self.semcaches else None),
+                                    observer=self.observer)
 
     def _ensure_executor(self) -> WorkerPool:
         if self.executor is None:
             self.executor = WorkerPool(workers=self.config.workers,
-                                       name="tenants")
+                                       name="tenants",
+                                       observer=self.observer)
             self._own_executor = True
         return self.executor
 
@@ -465,6 +479,9 @@ class MultiTenantRuntime:
             self.cache.bump_generation(tenant)
             self.cache.seed(observed, result, tenant=tenant)
             dropped = len(st.store.prune(result.configuration))
+        self.observer.event("tenant_swap", tenant=str(tenant),
+                            generation=self.cache.generation_of(tenant),
+                            dropped=dropped)
         return dropped
 
     def tune_all(self, global_storage: int,
@@ -490,10 +507,10 @@ class MultiTenantRuntime:
         return self.cache.generation_of(tenant)
 
     def stats(self) -> dict:
-        return {
+        out = {
             "governor": self.governor.stats(),
             "plan_cache": self.cache.stats(),
-            "batcher": self.batcher.stats.as_dict(),
+            "batcher": self.batcher.snapshot_stats().as_dict(),
             "tenants": {
                 tid: {"generation": self.cache.generation_of(tid),
                       "dispatches": st.engine.counters.as_dict(),
@@ -508,6 +525,9 @@ class MultiTenantRuntime:
                 for tid, st in sorted(self._tenants.items())
             },
         }
+        if self.observer.enabled:
+            out["metrics"] = self.observer.metrics.snapshot().as_dict()
+        return out
 
     # ---- execution --------------------------------------------------------
 
