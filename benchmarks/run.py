@@ -12,8 +12,8 @@ def main() -> None:
     args = ap.parse_args()
     n = 8000 if args.quick else args.n_rows
 
-    from benchmarks import (filter_bench, kernels_bench, online_bench,
-                            paper_tables as T)
+    from benchmarks import (autotune_bench, filter_bench, kernels_bench,
+                            online_bench, paper_tables as T)
 
     t0 = time.time()
     print("name,us_per_call,derived")
@@ -25,6 +25,9 @@ def main() -> None:
     # online runtime: drift/retune + semantic cache + observability
     # (span-tree acceptance, metrics-registry snapshot) -> BENCH_online.json
     online_bench.run(rows=min(n, 4000))
+    # whole-system auto-tuner: replayed hand sweep vs tuned Pareto front
+    # (determinism gate + 10% acceptance) -> BENCH_autotune.json
+    autotune_bench.run(quick=args.quick)
     T.bench_endtoend(n_rows=n, kinds=("hnsw", "diskann"))
     T.bench_storage_sweep(n_rows=n)
     T.bench_scalability(n_rows=n)

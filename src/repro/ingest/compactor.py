@@ -67,6 +67,10 @@ class CompactionStats:
     dead_reclaimed: int
     specs_rebuilt: int
     build_seconds: float
+    # deterministic work proxy for the build (rows x total column dims x
+    # (1 + indexes rebuilt)) — wall-clock-free, so trace replay (autotune)
+    # can model compaction occupancy reproducibly
+    build_cost: float = 0.0
 
 
 @dataclass
@@ -148,12 +152,14 @@ class Compactor:
             cstore = make_cstore(db)
         else:
             cstore = ColumnStore(db)
+        total_dims = sum(db.dims)
         stats = CompactionStats(
             reason=reason, upto_lsn=cut.upto_lsn,
             rows_before=cut.rows_before, rows_after=db.n_rows,
             delta_folded=cut.delta_folded,
             dead_reclaimed=cut.dead_reclaimed, specs_rebuilt=built,
-            build_seconds=time.time() - t0)
+            build_seconds=time.time() - t0,
+            build_cost=float(db.n_rows) * float(total_dims) * (1.0 + built))
         self.history.append(stats)
         return CompactedState(db=db, ids=ids, store=store, cstore=cstore,
                               stats=stats)

@@ -69,6 +69,7 @@ class CompactionEvent:
     dead_reclaimed: int
     delta_folded: int
     build_seconds: float       # shadow build (async: off the serving path)
+    build_cost: float = 0.0    # deterministic work proxy (CompactionStats)
     mode: str = "sync"         # "sync" | "async"
     replayed: int = 0          # post-cut log records replayed at rebase
     stall_s: float = 0.0       # serving-path stall (drain + replay + swap;
@@ -95,10 +96,11 @@ class IngestRuntime(OnlineRuntime):
                  result: TuningResult | None = None, store=None, engine=None,
                  config: RuntimeConfig | None = None,
                  ingest: IngestConfig | None = None,
-                 table: MutableTable | None = None, executor=None):
+                 table: MutableTable | None = None, executor=None,
+                 observer=None):
         super().__init__(db, mint, workload, constraints, result=result,
                          store=store, engine=engine, config=config,
-                         executor=executor)
+                         executor=executor, observer=observer)
         self.ingest = ingest or IngestConfig()
         self.table = table if table is not None else MutableTable(db)
         cs = self.engine.cstore
@@ -347,6 +349,7 @@ class IngestRuntime(OnlineRuntime):
             dead_reclaimed=state.stats.dead_reclaimed,
             delta_folded=state.stats.delta_folded,
             build_seconds=state.stats.build_seconds,
+            build_cost=state.stats.build_cost,
             mode=mode, replayed=replayed, stall_s=stall_s)
 
     def _install_compaction(self, state) -> int:

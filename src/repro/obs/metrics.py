@@ -139,13 +139,27 @@ class MetricsSnapshot:
     ``diff`` and ``merge`` operate on counters and histogram counts;
     gauges (and histogram min/max, which are not invertible) take the
     newer snapshot's value on diff.
+
+    A counter (or histogram) that was RESET between the two snapshots
+    would produce a negative delta, which breaks monotone objective
+    readers (the autotune replay reads windowed diffs as rates). ``diff``
+    therefore clamps: a shrunk counter reports the newer snapshot's
+    post-reset value, a shrunk histogram reports the newer data verbatim,
+    and both carry a ``"resets": 1`` marker; ``resets`` also tallies the
+    affected series so the discontinuity is visible, not silent.
     """
 
     series: dict = field(default_factory=dict)
     dropped_labelsets: dict = field(default_factory=dict)
+    resets: dict = field(default_factory=dict)
+
+    def _mark_reset(self, resets: dict, key) -> None:
+        name = key[0]
+        resets[name] = resets.get(name, 0) + 1
 
     def diff(self, older: "MetricsSnapshot") -> "MetricsSnapshot":
         out = {}
+        resets: dict = {}
         for key, cur in self.series.items():
             old = older.series.get(key)
             kind = cur["kind"]
@@ -154,27 +168,41 @@ class MetricsSnapshot:
                 continue
             if kind == COUNTER:
                 d = cur["value"] - old["value"]
-                if d:
+                if d < 0:  # reset mid-window: clamp, report post-reset value
+                    out[key] = {"kind": COUNTER, "value": cur["value"],
+                                "resets": 1}
+                    self._mark_reset(resets, key)
+                elif d:
                     out[key] = {"kind": COUNTER, "value": d}
             elif kind == GAUGE:
                 out[key] = {"kind": GAUGE, "value": cur["value"]}
             else:
                 d = cur["data"]["count"] - old["data"]["count"]
-                if d <= 0:
+                counts_d = [a - b for a, b in zip(cur["data"]["counts"],
+                                                  old["data"]["counts"])]
+                overflow_d = (cur["data"]["overflow"]
+                              - old["data"]["overflow"])
+                if d < 0 or overflow_d < 0 or any(c < 0 for c in counts_d):
+                    # reset mid-window: per-bucket subtraction is garbage;
+                    # the newer histogram IS the post-reset window
+                    entry = json.loads(json.dumps(cur))
+                    entry["resets"] = 1
+                    out[key] = entry
+                    self._mark_reset(resets, key)
+                    continue
+                if d == 0:
                     continue
                 data = json.loads(json.dumps(cur["data"]))
-                data["counts"] = [a - b for a, b in
-                                  zip(cur["data"]["counts"],
-                                      old["data"]["counts"])]
-                data["overflow"] = (cur["data"]["overflow"]
-                                    - old["data"]["overflow"])
+                data["counts"] = counts_d
+                data["overflow"] = overflow_d
                 data["count"] = d
                 data["total"] = cur["data"]["total"] - old["data"]["total"]
                 out[key] = {"kind": HISTOGRAM, "data": data}
         dropped = {n: c - older.dropped_labelsets.get(n, 0)
                    for n, c in self.dropped_labelsets.items()
                    if c - older.dropped_labelsets.get(n, 0)}
-        return MetricsSnapshot(series=out, dropped_labelsets=dropped)
+        return MetricsSnapshot(series=out, dropped_labelsets=dropped,
+                               resets=resets)
 
     def merge(self, other: "MetricsSnapshot") -> "MetricsSnapshot":
         out = json.loads(json.dumps(list(self.series.items())))
@@ -211,6 +239,8 @@ class MetricsSnapshot:
                 out[tag] = entry["value"]
         if self.dropped_labelsets:
             out["_dropped_labelsets"] = dict(self.dropped_labelsets)
+        if self.resets:
+            out["_resets"] = dict(self.resets)
         return out
 
     def to_jsonl(self) -> str:

@@ -37,6 +37,8 @@ from repro.serve.engine import BatchEngine
 class RuntimeConfig:
     max_batch: int = 32
     max_delay_ms: float = 5.0
+    quantum: int = 1           # DRR flush quantum (tenancy fairness)
+    fair: bool = True          # deficit-round-robin vs FIFO flush order
     window: int = 256          # workload-monitor sliding window
     min_window: int = 64       # queries required before drift can fire
     drift_threshold: float = 0.35
@@ -133,6 +135,8 @@ class OnlineRuntime:
         self.batcher = MicroBatcher(self._execute, self.plan_for,
                                     max_batch=self.config.max_batch,
                                     max_delay_ms=self.config.max_delay_ms,
+                                    quantum=self.config.quantum,
+                                    fair=self.config.fair,
                                     executor=flush_exec, stage=stage,
                                     semcache=self.semcache,
                                     observer=self.observer)

@@ -306,6 +306,22 @@ class BatchEngine:
         mv = self.mview
         return mv if mv is not None and mv.mutated() else None
 
+    def ground_truth(self, query: Query) -> np.ndarray:
+        """Exact top-k ids for one query against the LIVE serving state —
+        the same oracle ``execute_batch`` uses per plan group (filtered /
+        mutated / frozen branches), exposed for callers that need recall
+        for results served OUTSIDE a flush (e.g. semcache hits during
+        trace replay)."""
+        pred = getattr(query, "predicate", None)
+        if pred is not None:
+            return self._filtered_ground_truth(query, pred)
+        mv = self._mv()
+        if mv is not None:
+            return mv.ground_truth(query)
+        ids, _ = exact_topk(self.cstore.host(query.vid), query.concat(),
+                            query.k)
+        return ids
+
     def stage_batch(self, pairs: list[tuple[Query, QueryPlan]]) -> StagedBatch:
         """Compile the batch and dispatch its host→device transfers now
         (async flush pipelining). Pure staging: no kernel runs, no counter

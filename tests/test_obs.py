@@ -465,3 +465,33 @@ def test_runtime_stats_surface_metrics_and_snapshot_semantics(
     assert pre.batches == s1.batches
     assert rt.batcher.stats.batches == 0
     rt.close()
+
+
+def test_snapshot_diff_clamps_counter_resets():
+    """A registry reset between snapshots must not yield negative
+    deltas: the diff clamps at the post-reset value and carries an
+    explicit ``resets`` marker instead."""
+    reg = MetricsRegistry()
+    reg.counter("c", value=10, tenant="a")
+    reg.observe("h", 5.0)
+    s0 = reg.snapshot()
+    reg.reset()
+    reg.counter("c", value=3, tenant="a")
+    reg.observe("h", 1.0)
+    s1 = reg.snapshot()
+    d = s1.diff(s0)
+    entry = d.get("c", tenant="a")
+    assert entry["value"] == 3          # post-reset value, not 3 - 10
+    assert entry["resets"] == 1
+    h = d.get("h")
+    assert h["data"]["count"] == 1      # the post-reset window verbatim
+    assert h["data"]["total"] == 1.0
+    assert h["resets"] == 1
+    assert d.resets == {"c": 1, "h": 1}
+    assert d.as_dict()["_resets"] == {"c": 1, "h": 1}
+    # merge(base, clamped-diff) stays sane: counters never go negative
+    back = s0.merge(d)
+    assert back.get("c", tenant="a")["value"] == 13
+    # a clean diff carries no reset markers
+    clean = s1.diff(s1)
+    assert clean.resets == {} and "_resets" not in clean.as_dict()

@@ -204,3 +204,54 @@ def test_async_interleavings_converge_to_serial(ops, rng_seed, exec_seed):
         rt.drain(2.1)
         np.testing.assert_array_equal(np.asarray(a.ids),
                                       np.asarray(b.result(timeout=30)))
+
+
+# ------------------------------------------------------ autotune (§15)
+
+from repro.autotune import Trial, best_p99, dominates, front_of  # noqa: E402
+
+
+def _at_trials(rows):
+    return [Trial(trial_id=i, params={}, seed=0, fidelity=1.0,
+                  objectives={"p99_ms": p99, "throughput_qps": thpt,
+                              "device_bytes": byt, "recall_mean": rec})
+            for i, (p99, thpt, byt, rec) in enumerate(rows)]
+
+
+_at_row = st.tuples(st.floats(0.1, 1e4), st.floats(0.1, 1e4),
+                    st.floats(1.0, 1e9), st.floats(0.0, 1.0))
+
+
+@given(st.lists(_at_row, min_size=1, max_size=24),
+       st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_pareto_front_mutually_non_dominated(rows, theta):
+    trials = _at_trials(rows)
+    front = front_of(trials, theta=theta)
+    for t in front:
+        assert t.objectives["recall_mean"] >= theta
+    for a in front:
+        for b in front:
+            if a is not b:
+                assert not dominates(a.objectives, b.objectives)
+    # every feasible trial outside the front is dominated by a member
+    feas = [t for t in trials if t.objectives["recall_mean"] >= theta]
+    for t in feas:
+        if t not in front:
+            assert any(dominates(f.objectives, t.objectives)
+                       for f in front)
+
+
+@given(st.lists(_at_row, min_size=1, max_size=24),
+       st.floats(0.0, 1.0), st.floats(1.0, 1e9), st.floats(1.0, 1e9))
+@settings(max_examples=60, deadline=None)
+def test_relaxing_budget_never_worsens_best_p99(rows, theta, b1, b2):
+    trials = _at_trials(rows)
+    tight, relaxed = min(b1, b2), max(b1, b2)
+    p_tight = best_p99(front_of(trials, theta=theta, budget=tight))
+    p_relaxed = best_p99(front_of(trials, theta=theta, budget=relaxed))
+    p_unbounded = best_p99(front_of(trials, theta=theta, budget=None))
+    if p_tight is not None:
+        assert p_relaxed is not None and p_relaxed <= p_tight
+    if p_relaxed is not None:
+        assert p_unbounded is not None and p_unbounded <= p_relaxed
